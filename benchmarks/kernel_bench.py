@@ -1,0 +1,68 @@
+"""Kernel microbenchmarks: wall time of the jnp oracle path on CPU (the
+Pallas kernels themselves target TPU; interpret-mode timings are not
+hardware-meaningful, so the CSV reports the oracle path + the analytic
+VMEM/FLOP characteristics of each kernel's block schedule)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)  # compile
+    t0 = time.time()
+    for _ in range(iters):
+        r = fn(*args)
+    jax.block_until_ready(r)
+    return (time.time() - t0) / iters * 1e6
+
+
+def bench():
+    key = jax.random.PRNGKey(0)
+    rows = []
+
+    # distill loss oracle: 4096 rows x 8192 vocab
+    N, V = 2048, 8192
+    z = jax.random.normal(key, (N, V))
+    tl = jax.nn.log_softmax(jax.random.normal(jax.random.fold_in(key, 1), (N, V)), -1)
+    y = jax.random.randint(jax.random.fold_in(key, 2), (N,), 0, V)
+    f = jax.jit(lambda z, tl, y: ref.distill_loss_ref(z, y, tl, 1.5).sum())
+    us = _time(f, z, tl, y)
+    flops = 8 * N * V  # ~ops per fused pass
+    rows.append(("kernel,distill_loss_ref", us, f"rows={N} vocab={V} ~{flops/us/1e3:.1f}GFLOPs"))
+
+    # skr rectify oracle
+    probs = jax.nn.softmax(z[:512, :1024], -1)
+    labels = y[:512] % 1024
+    qbar = jnp.full((1024,), 0.5)
+    counts = jnp.ones((1024,), jnp.int32)
+    f2 = jax.jit(lambda p, l, q, c: ref.skr_rectify_ref(p, l, q, c))
+    us = _time(f2, probs, labels, qbar, counts)
+    rows.append(("kernel,skr_rectify_ref", us, "rows=512 classes=1024"))
+
+    # flash attention oracle
+    B, S, Nh, K, H = 2, 512, 8, 2, 64
+    q = jax.random.normal(key, (B, S, Nh, H)) * 0.3
+    k = jax.random.normal(jax.random.fold_in(key, 3), (B, S, K, H)) * 0.3
+    v = jax.random.normal(jax.random.fold_in(key, 4), (B, S, K, H)) * 0.3
+    f3 = jax.jit(lambda q, k, v: ref.flash_attention_ref(q, k, v))
+    us = _time(f3, q, k, v)
+    rows.append(("kernel,flash_attention_ref", us, f"B={B} S={S} H={Nh}x{H}"))
+
+    # rwkv6 scan oracle
+    B, T, Hh, hd = 2, 256, 4, 32
+    shp = (B, T, Hh, hd)
+    r = jax.random.normal(key, shp) * 0.3
+    kk = jax.random.normal(jax.random.fold_in(key, 5), shp) * 0.3
+    vv = jax.random.normal(jax.random.fold_in(key, 6), shp) * 0.3
+    w = jax.nn.sigmoid(jax.random.normal(jax.random.fold_in(key, 7), shp))
+    u = jax.random.normal(jax.random.fold_in(key, 8), (Hh, hd)) * 0.3
+    s0 = jnp.zeros((B, Hh, hd, hd))
+    f4 = jax.jit(lambda *a: ref.rwkv6_scan_ref(*a)[0])
+    us = _time(f4, r, kk, vv, w, u, s0)
+    rows.append(("kernel,rwkv6_scan_ref", us, f"B={B} T={T} H={Hh}x{hd}"))
+    return rows

@@ -1,0 +1,343 @@
+"""Roofline analysis (deliverable g).
+
+Three terms per (arch x shape x mesh), in seconds per step:
+
+  compute    = FLOPs / (chips * 197e12)          [bf16 peak, TPU v5e]
+  memory     = HBM bytes / (chips * 819e9)
+  collective = per-chip collective bytes / 50e9  [ICI link]
+
+Methodology (CPU container, no wall clocks):
+  * PRIMARY: closed-form analytic terms per config x shape x sharding
+    policy (analytic_terms below — formulas documented inline).
+  * The full-size dry-run (launch/dryrun.py JSONs) provides the per-device
+    memory_analysis (real buffer assignment) and the collective op census.
+  * EXPERIMENTAL cross-check: counting_costs lowers the step with the layer
+    scan python-unrolled at n_repeats in {1,2} and two sequence lengths,
+    solved as f(L,S) = base(S) + (L-1)*(a*S + b*S^2). Caveats measured on
+    this backend: cost_analysis counts a lax.scan body ONCE, and under
+    SPMD its FLOPs attribution is neither per-device nor global (a
+    1-vs-2-layer delta lands 4.4x below global / 13x above per-device
+    analytic values) — hence analytic terms remain primary and
+    counting numbers are reported with that caveat (EXPERIMENTS.md
+    §Roofline).
+
+MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) per the assignment;
+the ratio MODEL_FLOPS / step_FLOPs exposes remat/attention-rectangle waste.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import os
+from dataclasses import replace
+
+PEAK = 197e12
+HBM = 819e9
+ICI = 50e9
+
+
+# ---------------------------------------------------------------------------
+# analytic model
+# ---------------------------------------------------------------------------
+
+
+def analytic_terms(cfg, shape, *, chips: int, tp: int = 16, remat: bool = True) -> dict:
+    """Closed-form per-step roofline terms (documented formulas)."""
+    B, S, mode = shape.global_batch, shape.seq_len, shape.mode
+    dp = chips // tp
+    N_act = cfg.active_param_count()
+    N_tot = cfg.param_count()
+    L_attn = sum(
+        1 for b in cfg.blocks if b.kind in ("attn", "local_attn", "shared_attn",
+                                            "moe", "mla", "mla_moe")
+    )
+    d_attn = cfg.num_heads * cfg.head_dim
+    tokens = B * (S if mode != "decode" else 1)
+
+    # --- FLOPs ---------------------------------------------------------------
+    # weight matmuls: 2*N_act per token fwd; bwd 2x; remat re-forward 1x.
+    if mode == "train":
+        fwd_mult, total_mult = 2, (8 if remat else 6)
+    elif mode == "prefill":
+        fwd_mult, total_mult = 2, 2
+    else:
+        fwd_mult, total_mult = 2, 2
+    flops = total_mult * N_act * tokens
+
+    # attention score/context matmuls (baseline jnp path computes the full
+    # rectangle -- no causal skip):
+    if mode in ("train", "prefill"):
+        attn_fwd = 4.0 * B * S * S * d_attn * L_attn
+        win_fracs = []
+        for b in cfg.blocks:
+            if b.kind == "local_attn" and cfg.sliding_window:
+                win_fracs.append(min(1.0, cfg.sliding_window / S))
+        # local_attn layers with chunked masking still compute the rectangle
+        # at baseline; the flash kernel skips -> tracked as "useful" ratio.
+        flops += attn_fwd * (total_mult / fwd_mult)
+    else:
+        flops += 4.0 * B * S * d_attn * L_attn  # decode reads the cache once
+
+    # --- HBM bytes -------------------------------------------------------------
+    pbytes = 2 * N_tot  # bf16 resident
+    if mode == "train":
+        # per-device traffic: params read 3x (fwd + remat re-fwd + bwd) +
+        # grad write/read (bf16) + adam m,v read+write (fp32) + param write;
+        # weights are tp-sharded, optimizer state additionally dp-sharded
+        # (ZeRO-1) but each device still touches its own shard once.
+        bytes_dev = (3 * pbytes + 2 * pbytes + pbytes) / tp + (2 * 8 * N_tot) / chips
+        act = cfg.num_layers * (B // dp) * S * cfg.d_model * 2 * 6
+        bytes_dev += act
+    elif mode == "prefill":
+        bytes_dev = 2 * N_act / tp + cfg.num_layers * (B // dp) * S * cfg.d_model * 2 * 4
+    else:
+        cache = _cache_bytes(cfg, B, S)
+        bytes_dev = 2 * N_act / tp + cache / chips + (B // max(dp, 1) or 1) * cfg.d_model * 2 * cfg.num_layers * 4
+    mem_bytes = bytes_dev * chips  # aggregate for the table; term divides back
+
+    # --- collective bytes per chip ---------------------------------------------
+    coll = 0.0
+    Bloc = max(B // dp, 1)
+    act_bytes = Bloc * (S if mode != "decode" else 1) * cfg.d_model * 2
+    n_ar = {"train": 6, "prefill": 2, "decode": 2}[mode]  # per layer (TP)
+    coll += cfg.num_layers * n_ar * act_bytes * 2 * (tp - 1) / tp
+    if mode == "train":
+        # grad reduce over dp of the tp-shard: ring 2*(dp-1)/dp
+        coll += 2 * (2 * N_tot / tp) * (dp - 1) / dp
+    if cfg.num_experts:
+        n_moe = sum(1 for b in cfg.blocks if b.kind in ("moe", "mla_moe"))
+        a2a = Bloc * (S if mode != "decode" else 1) * cfg.moe_top_k * cfg.d_model * 2
+        coll += n_moe * a2a * ({"train": 3, "prefill": 1, "decode": 1}[mode]) * 2
+
+    return {
+        "flops": flops,
+        "hbm_bytes_per_chip": bytes_dev,
+        "coll_bytes_per_chip": coll,
+        "t_compute": flops / (chips * PEAK),
+        "t_memory": bytes_dev / HBM,
+        "t_collective": coll / ICI,
+        "model_flops": 6 * N_act * tokens if mode == "train" else 2 * N_act * tokens,
+        "tokens": tokens,
+    }
+
+
+def _cache_bytes(cfg, B, S):
+    per_tok = 0
+    for b in cfg.blocks:
+        if b.kind in ("attn", "shared_attn", "moe"):
+            per_tok += 2 * cfg.num_kv_heads * cfg.head_dim * 2
+        elif b.kind == "local_attn":
+            per_tok += 2 * cfg.num_kv_heads * cfg.head_dim * 2  # full-S baseline
+        elif b.kind in ("mla", "mla_moe"):
+            per_tok += (cfg.kv_lora_rank + cfg.qk_rope_dim) * 2
+    fixed = 0
+    for b in cfg.blocks:
+        if b.kind == "rwkv6":
+            fixed += cfg.ssm_heads * cfg.ssm_head_dim**2 * 4 + 2 * cfg.d_model * 4
+        elif b.kind == "mamba2":
+            fixed += cfg.ssm_heads * cfg.ssm_head_dim * cfg.ssm_state * 4
+    return B * (S * per_tok + fixed)
+
+
+def dominant(term_dict) -> str:
+    terms = {k: term_dict[k] for k in ("t_compute", "t_memory", "t_collective")}
+    return max(terms, key=terms.get)
+
+
+# ---------------------------------------------------------------------------
+# counting dry-runs (compiled-artifact measurement)
+# ---------------------------------------------------------------------------
+
+
+def counting_costs(arch: str, shape_name: str, *, seqs=None, use_seq_quad=None):
+    """Lower python-unrolled counting variants and solve the (L, S) model.
+    MUST run in a process with the 512-device XLA flag (see
+    launch/dryrun.py import-order contract). Returns extrapolated dict."""
+    import jax
+    from jax.sharding import PartitionSpec as P
+
+    from repro.configs import INPUT_SHAPES, get_arch
+    from repro.launch.dryrun import parse_collectives
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import (
+        cache_shapes, default_opts, input_specs, make_prefill_step,
+        make_serve_step, make_train_step, opt_shapes, param_shapes,
+    )
+    from repro.sharding import batch_specs, cache_specs, param_specs, zero1_specs
+    from repro.sharding.specs import to_named
+
+    cfg0 = get_arch(arch)
+    shape0 = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh()
+    chips = mesh.size
+    dp = mesh.shape["data"]
+    mode = shape0.mode
+
+    quad = (
+        use_seq_quad
+        if use_seq_quad is not None
+        else any(b.kind in ("attn", "local_attn", "shared_attn", "moe", "mla",
+                            "mla_moe") for b in cfg0.blocks)
+        and mode in ("train", "prefill")
+    )
+    if seqs is None:
+        seqs = (1024, 2048) if quad else (2048,)
+
+    def one(nrep, S):
+        cfg = replace(
+            cfg0,
+            n_repeats=min(nrep, cfg0.n_repeats) if cfg0.n_repeats else 0,
+            tail_blocks=cfg0.tail_blocks[:1],
+            head_blocks=cfg0.head_blocks[:1],
+        )
+        cfg = replace(
+            cfg,
+            num_layers=len(cfg.pattern) * cfg.n_repeats + len(cfg.tail_blocks)
+            + len(cfg.head_blocks),
+        )
+        sh = replace(shape0, seq_len=S if mode != "decode" else shape0.seq_len,
+                     global_batch=dp)
+        if mode == "decode":
+            sh = replace(sh, seq_len=S)
+        opts = default_opts(cfg, mesh, unroll_scan=True, attn_chunk=0,
+                            remat=False, loss_chunk=256)
+        ps = param_shapes(cfg, opts)
+        pspec = param_specs(cfg, opts, ps, mesh)
+        bspec = batch_specs(cfg, mode, sh.global_batch, mesh)
+        ispecs = input_specs(cfg, sh, opts)
+        with mesh:
+            if mode == "train":
+                osh = opt_shapes(ps)
+                ospec = {"step": P(), "m": zero1_specs(pspec, ps, mesh),
+                         "v": zero1_specs(pspec, ps, mesh)}
+                jitted = jax.jit(
+                    make_train_step(cfg, opts),
+                    in_shardings=(to_named(pspec, mesh), to_named(ospec, mesh),
+                                  to_named(bspec, mesh)),
+                    out_shardings=(to_named(pspec, mesh), to_named(ospec, mesh), None),
+                )
+                args = (ps, osh, ispecs)
+            elif mode == "prefill":
+                jitted = jax.jit(make_prefill_step(cfg, opts),
+                                 in_shardings=(to_named(pspec, mesh),
+                                               to_named(bspec, mesh)))
+                args = (ps, ispecs)
+            else:
+                csh = cache_shapes(cfg, opts, sh)
+                cspec = cache_specs(cfg, opts, csh, mesh, batch=sh.global_batch,
+                                    seq=sh.seq_len)
+                jitted = jax.jit(make_serve_step(cfg, opts),
+                                 in_shardings=(to_named(pspec, mesh),
+                                               to_named(cspec, mesh),
+                                               to_named(bspec, mesh)),
+                                 out_shardings=(None, None, to_named(cspec, mesh)))
+                args = (ps, csh, ispecs)
+            compiled = jitted.lower(*args).compile()
+            ca = compiled.cost_analysis() or {}
+            coll = parse_collectives(compiled.as_text())
+            return {
+                "flops": float(ca.get("flops", 0.0)),
+                "bytes": float(ca.get("bytes accessed", 0.0)),
+                "coll_bytes": sum(v["bytes"] for v in coll.values()),
+                "coll": coll,
+            }
+
+    recs = {}
+    for nrep in (1, 2):
+        for S in seqs:
+            recs[(nrep, S)] = one(nrep, S)
+
+    # solve: f(L,S) = base(S) + (L-1)*layer(S); layer(S)=a*S + b*S^2
+    def solve(field):
+        S1 = seqs[0]
+        lay = {S: recs[(2, S)][field] - recs[(1, S)][field] for S in seqs}
+        base = {S: recs[(1, S)][field] - lay[S] for S in seqs}
+        if len(seqs) == 2:
+            S2 = seqs[1]
+            # layer(S) = a*S + b*S^2
+            b = (lay[S2] / S2 - lay[S1] / S1) / (S2 - S1)
+            a = lay[S1] / S1 - b * S1
+            bb = (base[S2] / S2 - base[S1] / S1) / (S2 - S1)
+            ba = base[S1] / S1 - bb * S1
+            layer_f = lambda S: a * S + b * S * S
+            base_f = lambda S: ba * S + bb * S * S
+        else:
+            layer_f = lambda S: lay[S1] * S / S1
+            base_f = lambda S: base[S1] * S / S1
+        return layer_f, base_f
+
+    S_full = shape0.seq_len if mode != "decode" else shape0.seq_len
+    L_units = cfg0.n_repeats if cfg0.n_repeats else 1
+    batch_scale = shape0.global_batch / dp
+    out = {}
+    for field in ("flops", "bytes", "coll_bytes"):
+        layer_f, base_f = solve(field)
+        total = base_f(S_full) + (L_units - 1) * layer_f(S_full)
+        out[field] = max(total, 0.0) * batch_scale
+    # grad all-reduce portion of collectives does NOT scale with batch;
+    # treat the measured coll as activation-dominated (documented).
+    out["chips"] = chips
+    out["t_compute"] = out["flops"] / (chips * PEAK)
+    out["t_memory"] = out["bytes"] / chips / HBM
+    out["t_collective"] = out["coll_bytes"] / chips / ICI
+    return out
+
+
+# ---------------------------------------------------------------------------
+# table assembly from dry-run JSONs
+# ---------------------------------------------------------------------------
+
+
+def load_dryruns(d="experiments/dryrun"):
+    recs = []
+    if not os.path.isdir(d):
+        return recs
+    for f in sorted(os.listdir(d)):
+        if f.endswith(".json"):
+            with open(os.path.join(d, f)) as fh:
+                recs.append(json.load(fh))
+    return recs
+
+
+def roofline_table(dryrun_dir="experiments/dryrun", counting_path="experiments/counting.json"):
+    """Merge analytic terms with dry-run memory + counting measurements."""
+    from repro.configs import INPUT_SHAPES, get_arch
+
+    counting = {}
+    if os.path.exists(counting_path):
+        with open(counting_path) as f:
+            counting = json.load(f)
+
+    rows = []
+    for rec in load_dryruns(dryrun_dir):
+        if rec.get("mesh") != "16x16" or rec.get("tag"):
+            continue
+        arch, shape_name = rec["arch"], rec["shape"]
+        if rec["status"] == "skipped":
+            rows.append({"arch": arch, "shape": shape_name, "status": "skipped",
+                         "reason": rec["reason"]})
+            continue
+        cfg = get_arch(arch)
+        shape = INPUT_SHAPES[shape_name]
+        ana = analytic_terms(cfg, shape, chips=rec["num_devices"])
+        row = {
+            "arch": arch, "shape": shape_name, "status": "ok",
+            "chips": rec["num_devices"],
+            "temp_gb_per_dev": rec["memory"]["temp_bytes"] / 1e9,
+            "arg_gb_per_dev": rec["memory"]["argument_bytes"] / 1e9,
+            "analytic": {k: ana[k] for k in ("t_compute", "t_memory", "t_collective")},
+            "model_flops": ana["model_flops"],
+            "step_flops": ana["flops"],
+            "useful_ratio": ana["model_flops"] / max(ana["flops"], 1),
+            "collective_ops": rec.get("collectives", {}),
+        }
+        key = f"{arch}__{shape_name}"
+        if key in counting:
+            c = counting[key]
+            row["measured"] = {k: c[k] for k in ("t_compute", "t_memory", "t_collective")}
+            row["dominant"] = dominant(c)
+        else:
+            row["dominant"] = dominant(ana)
+        rows.append(row)
+    return rows

@@ -1,0 +1,80 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. FL results are cached in
+experiments/fl_results.json (delete to force re-runs).
+
+  PYTHONPATH=src python -m benchmarks.run            # full (slow: FL rounds)
+  PYTHONPATH=src python -m benchmarks.run --quick    # reduced budgets
+  PYTHONPATH=src python -m benchmarks.run --only table3,table7
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def roofline_rows():
+    from benchmarks.roofline import roofline_table
+
+    rows = []
+    for r in roofline_table():
+        if r["status"] == "skipped":
+            rows.append((f"roofline,{r['arch']},{r['shape']}", 0.0, "skipped"))
+            continue
+        terms = r.get("measured", r["analytic"])
+        rows.append((
+            f"roofline,{r['arch']},{r['shape']}",
+            terms["t_compute"] * 1e6,
+            f"dominant={r['dominant'].replace('t_','')} "
+            f"tc={terms['t_compute']*1e3:.2f}ms tm={terms['t_memory']*1e3:.2f}ms "
+            f"tx={terms['t_collective']*1e3:.2f}ms "
+            f"useful={r['useful_ratio']:.2f} temp={r['temp_gb_per_dev']:.1f}GB",
+        ))
+    if not rows:
+        rows.append(("roofline", 0.0, "no dryrun JSONs — run repro.launch.dryrun --all"))
+    return rows
+
+
+SUITES = ("table3", "table4", "table5", "table6", "table7", "fig5",
+          "kernels", "roofline")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else set(SUITES)
+
+    from benchmarks import fl_tables, kernel_bench
+
+    all_rows = []
+    try:
+        if "table3" in only:
+            all_rows += fl_tables.table3(args.quick)
+        if "table4" in only:
+            all_rows += fl_tables.table4_beta(args.quick)
+        if "table5" in only:
+            all_rows += fl_tables.table5_hetero(args.quick)
+        if "table6" in only:
+            all_rows += fl_tables.table6_edges(args.quick)
+        if "table7" in only:
+            all_rows += fl_tables.table7_comm(args.quick)
+        if "fig5" in only:
+            all_rows += fl_tables.fig5_convergence(args.quick)
+        if "kernels" in only:
+            all_rows += kernel_bench.bench()
+        if "roofline" in only:
+            all_rows += roofline_rows()
+    finally:
+        print("name,us_per_call,derived")
+        for name, us, derived in all_rows:
+            print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

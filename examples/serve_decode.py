@@ -1,0 +1,11 @@
+"""Batched decode serving of a reduced assigned architecture — the same
+serve_step the production dry-run lowers for decode_32k / long_500k.
+
+    PYTHONPATH=src python examples/serve_decode.py [arch]
+"""
+import sys
+
+from repro.launch.serve import serve
+
+arch = sys.argv[1] if len(sys.argv) > 1 else "rwkv6-1.6b"
+serve(arch, num_requests=4, prompt_len=8, gen_len=8, cache_len=32)

@@ -1,0 +1,76 @@
+"""FedEEC-at-LM-scale: cross-tier online distillation between two reduced
+assigned architectures — the "end-tier" model (llama3.2-3b reduced) teaches
+the "cloud-tier" model (llama3-8b reduced) over bridge TOKENS, through the
+same fused distill_loss kernel the production system uses, with SKR
+rectification of the teacher's token distributions.
+
+    PYTHONPATH=src python examples/train_lm_distill.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch, reduced
+from repro.core.skr import skr_init, skr_process_batch
+from repro.kernels.ops import fused_distill_loss
+from repro.launch.steps import default_opts
+from repro.models import forward_prefill, init_params
+from repro.models.transformer import _backbone, _embed_tokens, _logits_matrix
+from repro.models.layers import mask_padded_logits
+from repro.optim import adamw_init, adamw_update
+
+teacher_cfg = reduced(get_arch("llama3.2-3b"))
+student_cfg = reduced(get_arch("llama3-8b"))
+# a shared label space (vocab) — the equivalence-protocol requirement
+V = min(teacher_cfg.vocab_size, student_cfg.vocab_size)
+
+opts_t = default_opts(teacher_cfg, None, attn_chunk=0, remat=False)
+opts_s = default_opts(student_cfg, None, attn_chunk=0, remat=False)
+key = jax.random.PRNGKey(0)
+pt = init_params(key, teacher_cfg, opts_t)
+ps = init_params(jax.random.fold_in(key, 1), student_cfg, opts_s)
+opt = adamw_init(ps)
+skr = skr_init(V, queue_len=20)
+
+B, S, TEMP, BETA = 4, 32, 0.5, 1.5
+rng = np.random.default_rng(0)
+
+
+def logits_fn(cfg, opts, params, tokens):
+    x = _embed_tokens(cfg, params, tokens)
+    h, _, _ = _backbone(cfg, opts, params, x, positions=jnp.arange(tokens.shape[1]))
+    w = _logits_matrix(cfg, params)
+    return mask_padded_logits(h @ w.T.astype(h.dtype), cfg.vocab_size)
+
+
+@jax.jit
+def teach(pt, skr, tokens, labels):
+    z = logits_fn(teacher_cfg, opts_t, pt, tokens)[..., :V]
+    probs = jax.nn.softmax(z.reshape(-1, V) / TEMP, -1)
+    skr, q = skr_process_batch(skr, probs, labels.reshape(-1))
+    return jnp.log(jnp.maximum(q, 1e-12)), skr
+
+
+@jax.jit
+def student_step(ps, opt, tokens, labels, tlogq):
+    def loss_fn(p):
+        z = logits_fn(student_cfg, opts_s, p, tokens)[..., :V]
+        per_row = fused_distill_loss(
+            z.reshape(-1, V).astype(jnp.float32), tlogq, labels.reshape(-1),
+            beta=BETA)
+        return per_row.mean()
+
+    l, g = jax.value_and_grad(loss_fn)(ps)
+    ps, opt = adamw_update(g, opt, ps, lr=1e-3, weight_decay=0.0)
+    return ps, opt, l
+
+
+print(f"teacher={teacher_cfg.name} -> student={student_cfg.name}, V={V}")
+for step in range(20):
+    toks = rng.integers(1, V, (B, S + 1)).astype(np.int32)
+    tokens, labels = jnp.asarray(toks[:, :-1]), jnp.asarray(toks[:, 1:])
+    tlogq, skr = teach(pt, skr, tokens, labels)
+    ps, opt, loss = student_step(ps, opt, tokens, labels, tlogq)
+    if (step + 1) % 5 == 0:
+        print(f"  step {step+1:3d} distill loss {float(loss):.4f}")
+print("done — student distilled through BSBODP+SKR at LM scale")

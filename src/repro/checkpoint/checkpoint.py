@@ -1,0 +1,93 @@
+"""Checkpointing: msgpack-serialized pytrees of arrays.
+
+Format: a flat dict {"/"-joined key-path: {dtype, shape, data(bytes)}}.
+Works for any nested dict/list/tuple pytree of jnp/np arrays and python
+scalars. Writes are atomic (tmp + rename). Multi-host note: in a real
+multi-pod deployment only process 0 writes after fully_replicated gather or
+per-shard files keyed by process index; here (single host) one file.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+from typing import Any
+
+import jax
+import msgpack
+import numpy as np
+
+
+def _flatten(tree: Any, prefix: str = "") -> dict[str, Any]:
+    out: dict[str, Any] = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.update(_flatten(tree[k], f"{prefix}/{k}"))
+    elif isinstance(tree, (list, tuple)):
+        out[f"{prefix}/__seq__"] = "list" if isinstance(tree, list) else "tuple"
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}/{i:04d}"))
+    else:
+        arr = np.asarray(tree)
+        out[prefix] = {
+            b"dtype": arr.dtype.str if arr.dtype != np.dtype("bfloat16") else "bfloat16",
+            b"shape": list(arr.shape),
+            b"data": arr.tobytes(),
+        }
+    return out
+
+
+def save_pytree(path: str, tree: Any) -> None:
+    import jax.numpy as jnp
+
+    host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+    flat = _flatten(host_tree)
+    payload = msgpack.packb(flat, use_bin_type=True)
+    d = os.path.dirname(os.path.abspath(path))
+    os.makedirs(d, exist_ok=True)
+    with tempfile.NamedTemporaryFile(dir=d, delete=False) as f:
+        f.write(payload)
+        tmp = f.name
+    os.replace(tmp, path)
+
+
+def load_pytree(path: str) -> Any:
+    import jax.numpy as jnp
+
+    with open(path, "rb") as f:
+        flat = msgpack.unpackb(f.read(), raw=False, strict_map_key=False)
+
+    # rebuild nested structure
+    root: dict[str, Any] = {}
+    seqs: dict[str, str] = {}
+    for key, val in flat.items():
+        parts = [p for p in key.split("/") if p]
+        if parts and parts[-1] == "__seq__":
+            seqs["/".join(parts[:-1])] = val
+            continue
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        if isinstance(val, dict):
+            dt = val.get("dtype", val.get(b"dtype"))
+            shape = val.get("shape", val.get(b"shape"))
+            data = val.get("data", val.get(b"data"))
+            if dt == "bfloat16":
+                arr = np.frombuffer(data, np.uint16).reshape(shape)
+                arr = jnp.asarray(arr.view(jnp.bfloat16))
+            else:
+                arr = np.frombuffer(data, np.dtype(dt)).reshape(shape).copy()
+            node[parts[-1]] = arr
+        else:
+            node[parts[-1]] = val
+
+    def to_seq(node, path=""):
+        if not isinstance(node, dict):
+            return node
+        node = {k: to_seq(v, f"{path}/{k}") for k, v in node.items()}
+        if path.lstrip("/") in {s.lstrip("/") for s in seqs} or path in seqs:
+            kind = seqs.get(path, seqs.get(path.lstrip("/"), "list"))
+            items = [node[k] for k in sorted(node)]
+            return tuple(items) if kind == "tuple" else items
+        return node
+
+    return to_seq(root, "")

@@ -1,0 +1,38 @@
+"""Config package: ArchConfig registry + FL experiment presets."""
+from repro.configs.base import (  # noqa: F401
+    ARCH_REGISTRY,
+    ArchConfig,
+    BlockKind,
+    FLConfig,
+    INPUT_SHAPES,
+    InputShape,
+    get_arch,
+    list_archs,
+    reduced,
+    register_arch,
+    with_long_variant,
+)
+
+_LOADED = False
+
+
+def load_all() -> None:
+    """Import every per-architecture module (registration side effects)."""
+    global _LOADED
+    if _LOADED:
+        return
+    from repro.configs import (  # noqa: F401
+        deepseek_v2_lite_16b,
+        fedeec_paper,
+        gemma3_12b,
+        llama3_2_3b,
+        llama3_8b,
+        llava_next_mistral_7b,
+        nemotron_4_15b,
+        qwen2_moe_a2_7b,
+        rwkv6_1_6b,
+        whisper_small,
+        zamba2_7b,
+    )
+
+    _LOADED = True

@@ -1,0 +1,75 @@
+"""Bridge-Sample-Based Online Distillation Protocol (paper §IV-B).
+
+Each parent-child pair mutually distills over *bridge samples* dec(ε) —
+synthetic images decoded from leaf embeddings ε = enc(X*) by the shared
+frozen decoder. The teacher transmits (possibly SKR-rectified) temperature
+softmax probabilities; the student optimizes:
+
+  non-leaf (Eq. 3 / Eq. 32):
+      L = CE(softmax(f(dec(ε))), y) + β · KL(softmax(f(dec(ε))) || Q)
+  leaf (Eq. 5 / Eq. 33):
+      L = CE(f(X*), y*) + γ · L_non_leaf
+
+Knowledge is exchanged as logits/probabilities only — the protocol is
+model-agnostic (equivalence protocol, Def. 1), which is what makes
+tier-scaled models and dynamic migration legal (Thm. 1).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def softmax_ce_with_probs(student_probs, labels):
+    """CE between student softmax probs and integer labels (Eq. 3 uses the
+    softmax output, not raw logits)."""
+    logp = jnp.log(jnp.maximum(student_probs, 1e-12))
+    gold = jnp.take_along_axis(logp, labels[:, None], axis=1)[:, 0]
+    return -jnp.mean(gold)
+
+
+def kl_div(p, q):
+    """KL(p || q), batched over leading axis, mean-reduced."""
+    p = jnp.maximum(p, 1e-12)
+    q = jnp.maximum(q, 1e-12)
+    return jnp.mean(jnp.sum(p * (jnp.log(p) - jnp.log(q)), axis=-1))
+
+
+def non_leaf_loss(student_logits, labels, teacher_probs, beta: float):
+    """Eq. (3)/(32): the student distills teacher knowledge on bridge samples.
+
+    student_logits: f(dec(ε); W^S); teacher_probs: τ(z^ε/T) or rectified Q.
+    """
+    sp = jax.nn.softmax(student_logits, axis=-1)
+    return softmax_ce_with_probs(sp, labels) + beta * kl_div(sp, teacher_probs)
+
+
+def leaf_loss(
+    student_logits_local,
+    labels_local,
+    student_logits_bridge,
+    labels_bridge,
+    teacher_probs,
+    beta: float,
+    gamma: float,
+):
+    """Eq. (5)/(33): local CE on private samples + γ · non-leaf loss on the
+    bridge samples of the same embeddings."""
+    ce_local = softmax_xent(student_logits_local, labels_local)
+    return ce_local + gamma * non_leaf_loss(
+        student_logits_bridge, labels_bridge, teacher_probs, beta
+    )
+
+
+def softmax_xent(logits, labels):
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=1)[:, 0]
+    return jnp.mean(logz - gold)
+
+
+def extract_knowledge(apply_fn: Callable, params, bridge_x, temperature: float):
+    """Teacher side: logits + temperature softmax on bridge samples."""
+    z = apply_fn(params, bridge_x)
+    return z, jax.nn.softmax(z / temperature, axis=-1)

@@ -1,0 +1,253 @@
+"""FedEEC: recursive knowledge agglomeration over the EEC-NET (Algorithm 3).
+
+Two phases per run:
+  * Init: every leaf encodes its private data with the frozen encoder and
+    sends (ε, y) up the tree; every interior node stores the union of its
+    subtree's embeddings.
+  * Train rounds: post-order traversal; every (child, parent) pair runs
+    BSBODP(+SKR): child-as-student then parent-as-student, distilling over
+    bridge samples dec(ε) of the child's subtree embeddings.
+
+FedAgg (the INFOCOM'24 predecessor) is exactly this with SKR disabled
+(``use_skr=False``) — the ablation the paper reports in Table III.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FLConfig
+from repro.core import bsbodp
+from repro.core.skr import skr_init, skr_process_batch
+from repro.core.topology import Tree
+from repro.fl.comm import CommMeter
+from repro.models.autoencoder import decode, encode
+from repro.models.registry import get_fl_model
+from repro.optim import adamw_init, adamw_update
+
+
+class FedEEC:
+    def __init__(
+        self,
+        cfg: FLConfig,
+        tree: Tree,
+        client_data: dict[str, tuple[np.ndarray, np.ndarray]],
+        auto_params,
+        *,
+        use_skr: bool = True,
+        model_of: dict[str, str] | None = None,
+        seed: int = 0,
+    ):
+        self.cfg = cfg
+        self.tree = tree
+        self.auto = auto_params
+        self.use_skr = use_skr
+        self.comm = CommMeter()
+        self.rng = np.random.default_rng(seed)
+        key = jax.random.PRNGKey(seed)
+
+        # tier -> model assignment
+        self.model_of: dict[str, str] = {}
+        leaves = tree.leaves
+        for v in tree.nodes:
+            if model_of and v in model_of:
+                self.model_of[v] = model_of[v]
+            elif tree.is_leaf(v):
+                if cfg.end_model_hetero and leaves.index(v) % 2 == 1:
+                    self.model_of[v] = cfg.end_model_hetero
+                else:
+                    self.model_of[v] = cfg.end_model
+            elif v == tree.root:
+                self.model_of[v] = cfg.cloud_model
+            else:
+                self.model_of[v] = cfg.edge_model
+
+        # node states
+        self.params: dict[str, object] = {}
+        self.opt: dict[str, object] = {}
+        self.skr: dict[str, object] = {}
+        self.apply: dict[str, Callable] = {}
+        for i, v in enumerate(tree.nodes):
+            init_fn, apply_fn = get_fl_model(self.model_of[v])
+            p = init_fn(jax.random.fold_in(key, i), cfg.num_classes, cfg.image_size)
+            self.params[v] = p
+            self.opt[v] = adamw_init(p)
+            self.skr[v] = skr_init(cfg.num_classes, cfg.queue_len)
+            self.apply[v] = apply_fn
+
+        self.client_data = client_data
+        self.embeddings: dict[str, tuple[np.ndarray, np.ndarray]] = {}
+        self._step_cache: dict = {}
+        self._init_phase()
+
+    # ------------------------------------------------------------------ init
+
+    def _init_phase(self):
+        """Leaves encode private data; embeddings propagate to the root."""
+        enc = jax.jit(encode)
+        for v in self.tree.post_order():
+            if self.tree.is_leaf(v):
+                x, y = self.client_data[v]
+                eps = np.asarray(enc(self.auto, jnp.asarray(x)))
+                self.embeddings[v] = (eps, y.copy())
+                # upload (ε, y): (|ε| + 1) per sample — Table VII init term
+                link = self.comm.link_kind(self.tree, v)
+                self.comm.record(link, eps.size + len(y), "init-embed")
+            elif v != self.tree.root:
+                self._gather_children(v)
+        self._gather_children(self.tree.root)
+
+    def _gather_children(self, v):
+        es, ys = [], []
+        for c in self.tree.children[v]:
+            e, y = self.embeddings[c]
+            es.append(e)
+            ys.append(y)
+            if v != self.tree.root:
+                link = self.comm.link_kind(self.tree, v)
+                self.comm.record(link, e.size + y.size, "relay-embed")
+        self.embeddings[v] = (np.concatenate(es), np.concatenate(ys))
+
+    # -------------------------------------------------------------- jit steps
+
+    def _teacher_fn(self, model_name):
+        key = ("teacher", model_name)
+        if key not in self._step_cache:
+            apply_fn = get_fl_model(model_name)[1]
+            T = self.cfg.temperature
+
+            @jax.jit
+            def fn(params, skr_state, bridge_x, labels):
+                z = apply_fn(params, bridge_x)
+                probs = jax.nn.softmax(z / T, axis=-1)
+                new_state, q = skr_process_batch(skr_state, probs, labels)
+                return probs, q, new_state
+
+            self._step_cache[key] = fn
+        return self._step_cache[key]
+
+    def _student_fn(self, model_name, leaf: bool):
+        key = ("student", model_name, leaf)
+        if key not in self._step_cache:
+            apply_fn = get_fl_model(model_name)[1]
+            beta, gamma, lr = self.cfg.beta, self.cfg.gamma, self.cfg.lr
+
+            if leaf:
+                def loss_fn(p, bx, by, tq, lx, ly):
+                    zl = apply_fn(p, lx)
+                    zb = apply_fn(p, bx)
+                    return bsbodp.leaf_loss(zl, ly, zb, by, tq, beta, gamma)
+
+                @jax.jit
+                def fn(params, opt, bx, by, tq, lx, ly):
+                    l, g = jax.value_and_grad(loss_fn)(params, bx, by, tq, lx, ly)
+                    params, opt = adamw_update(g, opt, params, lr=lr, weight_decay=0.0)
+                    return params, opt, l
+            else:
+                def loss_fn(p, bx, by, tq):
+                    zb = apply_fn(p, bx)
+                    return bsbodp.non_leaf_loss(zb, by, tq, beta)
+
+                @jax.jit
+                def fn(params, opt, bx, by, tq):
+                    l, g = jax.value_and_grad(loss_fn)(params, bx, by, tq)
+                    params, opt = adamw_update(g, opt, params, lr=lr, weight_decay=0.0)
+                    return params, opt, l
+
+            self._step_cache[key] = fn
+        return self._step_cache[key]
+
+    def _decode_fn(self):
+        if "decode" not in self._step_cache:
+            img = self.cfg.image_size
+            self._step_cache["decode"] = jax.jit(
+                lambda e: decode(self.auto, e, img)
+            )
+        return self._step_cache["decode"]
+
+    # ------------------------------------------------------------- protocol
+
+    def _bsbodp_directional(self, v_s: str, v_t: str):
+        """One direction: v_t teaches v_s over bridge samples of the shared
+        (= intersection of leaf sets = student∩teacher subtree) embeddings."""
+        cfg = self.cfg
+        pair_node = v_s if self.tree.parent.get(v_s) == v_t else v_t
+        eps, labels = self.embeddings[pair_node]
+        n = len(labels)
+        bs = min(cfg.batch_size, n)
+        dec_fn = self._decode_fn()
+        teacher = self._teacher_fn(self.model_of[v_t])
+        is_leaf = self.tree.is_leaf(v_s)
+        student = self._student_fn(self.model_of[v_s], is_leaf)
+        link = self.comm.link_kind(
+            self.tree, v_s if self.tree.parent.get(v_s) == v_t else v_t
+        )
+
+        # one pass over the pair's embeddings per round (CPU-capped), or a
+        # fixed number of steps when cfg.distill_steps > 0
+        steps = cfg.distill_steps or min(
+            max(1, (n + bs - 1) // bs), cfg.max_distill_steps
+        )
+        for _ in range(steps):
+            idx = self.rng.choice(n, size=bs, replace=n < bs)
+            e_b = jnp.asarray(eps[idx])
+            y_b = jnp.asarray(labels[idx])
+            bridge = dec_fn(e_b)
+            probs, q, new_skr = teacher(
+                self.params[v_t], self.skr[v_t], bridge, y_b
+            )
+            self.skr[v_t] = new_skr
+            tq = q if self.use_skr else probs
+            # teacher -> student: (|z| + 1) per sample (Table VII round term)
+            self.comm.record(link, bs * (cfg.num_classes + 1), "logits")
+            if is_leaf:
+                lx, ly = self.client_data[v_s]
+                li = self.rng.choice(len(ly), size=min(bs, len(ly)), replace=len(ly) < bs)
+                self.params[v_s], self.opt[v_s], _ = student(
+                    self.params[v_s], self.opt[v_s], bridge, y_b, tq,
+                    jnp.asarray(lx[li]), jnp.asarray(ly[li]),
+                )
+            else:
+                self.params[v_s], self.opt[v_s], _ = student(
+                    self.params[v_s], self.opt[v_s], bridge, y_b, tq
+                )
+
+    def bsbodp_pair(self, v1: str, v2: str):
+        """Algorithm 1/2: both directions."""
+        self._bsbodp_directional(v1, v2)
+        self._bsbodp_directional(v2, v1)
+
+    # ------------------------------------------------------------ training
+
+    def train_round(self):
+        """Algorithm 3 FedEECTrain: post-order, each node pairs with parent."""
+        for v in self.tree.post_order():
+            if v == self.tree.root:
+                continue
+            self.bsbodp_pair(v, self.tree.parent[v])
+
+    def migrate(self, node: str, new_parent: str):
+        """Dynamic migration (§IV-E): legal for any pair under BSBODP+SKR.
+        Embeddings of the moved subtree are re-registered up both paths."""
+        self.tree.migrate(node, new_parent)
+        # recompute interior embedding stores along affected paths
+        for v in self.tree.post_order():
+            if not self.tree.is_leaf(v):
+                es, ys = [], []
+                for c in self.tree.children[v]:
+                    e, y = self.embeddings[c]
+                    es.append(e)
+                    ys.append(y)
+                if es:
+                    self.embeddings[v] = (np.concatenate(es), np.concatenate(ys))
+
+    def cloud_params(self):
+        return self.params[self.tree.root]
+
+    def cloud_apply(self):
+        return self.apply[self.tree.root]

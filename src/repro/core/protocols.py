@@ -1,0 +1,91 @@
+"""Interaction protocols (paper §IV-E, Definitions 1-2, Theorems 1-2).
+
+An interaction protocol is characterized by the binary relation R it imposes
+on parent-child model pairs:
+
+* Equivalence protocols (reflexive, symmetric, transitive): FedAvg-style
+  identical structures, and model-agnostic protocols like BSBODP(+SKR) where
+  R = V x V (no structural constraint). Any non-root node may migrate under
+  any other parent (Theorem 1).
+* Partial-order protocols (reflexive, antisymmetric, transitive): partial
+  training / sub-model extraction (FedRolex-style), where the child model
+  must be a sub-model of the parent's. Migration can be illegal (Theorem 2).
+
+These are *checkable* here: a protocol declares its relation, and the
+engine's migrate() consults `allows_migration` before re-parenting.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Protocol:
+    name: str
+    kind: str  # "equivalence" | "partial_order"
+    # relation(model_a, model_b) -> bool: is <a, b> in R?
+    relation: Callable[[object, object], bool]
+
+    def allows_migration(self, model_of, node: str, new_parent: str) -> bool:
+        """Can ``node`` become a child of ``new_parent``?"""
+        if self.kind == "equivalence":
+            return True  # Theorem 1
+        return bool(self.relation(model_of(node), model_of(new_parent)))
+
+
+def same_structure(a, b) -> bool:
+    ta = jax.tree.structure(a)
+    tb = jax.tree.structure(b)
+    if ta != tb:
+        return False
+    return all(
+        x.shape == y.shape for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b))
+    )
+
+
+def is_submodel(a, b) -> bool:
+    """a ⊑ b: every leaf of a exists in b with dims <= b's (partial training)."""
+    fa = dict(_flat(a))
+    fb = dict(_flat(b))
+    if not set(fa) <= set(fb):
+        return False
+    return all(
+        len(fa[k].shape) == len(fb[k].shape)
+        and all(x <= y for x, y in zip(fa[k].shape, fb[k].shape))
+        for k in fa
+    )
+
+
+def _flat(tree, prefix=""):
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            yield from _flat(v, f"{prefix}/{k}")
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            yield from _flat(v, f"{prefix}/{i}")
+    else:
+        yield prefix, tree
+
+
+# The three protocols used in the experiments ------------------------------
+
+PARAM_AVG = Protocol("parameter-averaging", "equivalence", same_structure)
+BSBODP_SKR = Protocol("bsbodp+skr", "equivalence", lambda a, b: True)
+PARTIAL_TRAIN = Protocol("partial-training", "partial_order", is_submodel)
+
+
+def aggregate_params(children_params: list, weights: list[float]):
+    """FedAvg aggregation, Eq. (2): data-size weighted parameter average."""
+    total = sum(weights)
+    ws = [w / total for w in weights]
+    out = jax.tree.map(
+        lambda *xs: sum(w * x.astype(jnp.float32) for w, x in zip(ws, xs)).astype(
+            xs[0].dtype
+        ),
+        *children_params,
+    )
+    return out

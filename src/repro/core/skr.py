@@ -1,0 +1,98 @@
+"""Self-Knowledge Rectification (paper §IV-C).
+
+Per node, per class c, a circular *knowledge queue* of length B stores the
+model's own confidence p_c from past *correct* classifications of c-class
+bridge samples. Before transmitting knowledge P = softmax(z/T) for a bridge
+sample with label c:
+
+  * misattribution test (Eq. 8):  exists i != c with p_i > p_c;
+  * if misattributed and the queue is non-empty, rectify (Eq. 31):
+        p'_c = mean(queue_c)                      (Gaussian MLE, Eq. 15)
+        p'_i = p_i * (1 - p'_c) / (1 - p_c)       (KL projection, i != c)
+  * else transmit P unchanged;
+  * if correctly attributed, push p_c into queue_c.
+
+The sequential per-sample semantics of Algorithm 2 are preserved exactly via
+``lax.scan`` (`skr_process_batch`). The batched rectification map given
+fixed queue means (`rectify_given_qbar`) is the pure-jnp oracle for the
+Pallas kernel `repro.kernels.skr_rectify`.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def skr_init(num_classes: int, queue_len: int):
+    return {
+        "q": jnp.zeros((num_classes, queue_len), jnp.float32),
+        "count": jnp.zeros((num_classes,), jnp.int32),
+        "head": jnp.zeros((num_classes,), jnp.int32),
+    }
+
+
+def queue_means(state):
+    """Mean of the valid prefix of each class queue; 0 count -> 0."""
+    B = state["q"].shape[1]
+    valid = jnp.arange(B)[None, :] < state["count"][:, None]
+    s = jnp.sum(state["q"] * valid, axis=1)
+    return s / jnp.maximum(state["count"], 1)
+
+
+def rectify_given_qbar(probs, labels, qbar, counts):
+    """Batched Eq. (31) with precomputed queue means.
+
+    probs: (N, C) temperature-softmax probabilities; labels: (N,);
+    qbar/counts: (C,). Returns rectified (N, C).
+    """
+    N, C = probs.shape
+    p_c = jnp.take_along_axis(probs, labels[:, None], axis=1)[:, 0]  # (N,)
+    mis = jnp.argmax(probs, axis=1) != labels  # Eq. 8
+    has_hist = counts[labels] > 0
+    do = mis & has_hist
+    qb = qbar[labels]
+    scale = (1.0 - qb) / jnp.maximum(1.0 - p_c, 1e-12)
+    rect = probs * scale[:, None]
+    rect = jnp.where(
+        jax.nn.one_hot(labels, C, dtype=bool), qb[:, None], rect
+    )
+    return jnp.where(do[:, None], rect, probs)
+
+
+def skr_process_batch(state, probs, labels):
+    """Exact Algorithm-2 semantics: per-sample sequential queue reads/pushes.
+
+    Returns (new_state, Q) where Q (N, C) is the knowledge to transmit.
+    """
+    Bq = state["q"].shape[1]
+
+    def step(st, xy):
+        p, c = xy
+        correct = jnp.argmax(p) == c
+        cnt = st["count"][c]
+        valid = jnp.arange(Bq) < cnt
+        qbar = jnp.sum(st["q"][c] * valid) / jnp.maximum(cnt, 1)
+        do_rect = (~correct) & (cnt > 0)
+        p_c = p[c]
+        pc_new = jnp.where(do_rect, qbar, p_c)
+        scale = (1.0 - pc_new) / jnp.maximum(1.0 - p_c, 1e-12)
+        q_out = jnp.where(do_rect, p * scale, p)
+        q_out = q_out.at[c].set(pc_new)
+        # push on correct attribution
+        hd = st["head"][c]
+        new_q = st["q"].at[c, hd].set(jnp.where(correct, p_c, st["q"][c, hd]))
+        new_head = st["head"].at[c].set(
+            jnp.where(correct, (hd + 1) % Bq, hd)
+        )
+        new_count = st["count"].at[c].set(
+            jnp.where(correct, jnp.minimum(cnt + 1, Bq), cnt)
+        )
+        return {"q": new_q, "count": new_count, "head": new_head}, q_out
+
+    return jax.lax.scan(step, state, (probs, labels))
+
+
+def skr_transmit(state, logits, labels, temperature: float):
+    """Convenience: logits -> temperature softmax -> SKR -> (state, Q)."""
+    probs = jax.nn.softmax(logits / temperature, axis=-1)
+    return skr_process_batch(state, probs, labels)

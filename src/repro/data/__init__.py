@@ -1,0 +1,3 @@
+"""Data substrate: synthetic datasets, non-IID partitioning, loaders."""
+from repro.data.partition import dirichlet_partition  # noqa: F401
+from repro.data.synthetic import make_dataset  # noqa: F401

@@ -1,0 +1,2 @@
+"""FL simulation plane: nodes, engine, baselines, communication accounting."""
+from repro.fl.engine import run_experiment  # noqa: F401

@@ -1,0 +1,203 @@
+"""Baseline HFL algorithms (paper §V-A.3).
+
+All parameter-aggregation baselines deploy the SAME model structure on every
+node (paper §V-B.3: uniformly M_end^1, since aggregation requires it) — that
+is precisely the bottleneck effect FedEEC removes.
+
+  * HierFAVG  (Liu et al., ICC'20): κ1 local steps, edge aggregation, κ2
+    edge rounds, cloud aggregation, redistribute.
+  * HierMo    (Yang et al., TPDS'23): HierFAVG + server-side momentum
+    aggregation (simplified: aggregation-level momentum; recorded in
+    DESIGN.md §assumptions).
+  * HierQSGD  (Liu et al., TWC'23): HierFAVG with uniformly-quantized
+    deltas on both hops (8-bit stochastic uniform quantization).
+  * DemLearn-lite (Nguyen et al., TNNLS'23): self-organizing hierarchy —
+    clients re-clustered by label histogram every round; plain averaging.
+  * FedAvg    (two-tier flat reference).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FLConfig
+from repro.core.protocols import aggregate_params
+from repro.core.topology import Tree
+from repro.fl.comm import CommMeter
+from repro.models.registry import get_fl_model
+from repro.optim import adamw_init, adamw_update
+
+
+def _num_floats(params) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+
+
+def _local_train_fn(apply_fn, lr):
+    def loss_fn(p, x, y):
+        z = apply_fn(p, x)
+        logz = jax.nn.logsumexp(z, axis=-1)
+        gold = jnp.take_along_axis(z, y[:, None], axis=1)[:, 0]
+        return jnp.mean(logz - gold)
+
+    @jax.jit
+    def step(params, opt, x, y):
+        l, g = jax.value_and_grad(loss_fn)(params, x, y)
+        params, opt = adamw_update(g, opt, params, lr=lr, weight_decay=0.0)
+        return params, opt, l
+
+    return step
+
+
+def _quantize(delta, levels: int = 256, rng=None):
+    """Stochastic uniform quantization of a pytree (QSGD-style)."""
+    def q(x):
+        x = np.asarray(x, np.float32)
+        scale = np.max(np.abs(x)) + 1e-12
+        y = x / scale * (levels // 2)
+        low = np.floor(y)
+        p = y - low
+        r = rng.random(x.shape) if rng is not None else 0.5
+        yq = low + (r < p)
+        return (yq / (levels // 2) * scale).astype(np.float32)
+
+    return jax.tree.map(lambda x: jnp.asarray(q(x)), delta)
+
+
+class HierarchicalFedAvg:
+    """HierFAVG family engine; momentum/quantization/self-organization are
+    knobs on the same two-stage aggregation loop."""
+
+    def __init__(
+        self,
+        cfg: FLConfig,
+        tree: Tree,
+        client_data: dict[str, tuple[np.ndarray, np.ndarray]],
+        *,
+        momentum: float = 0.0,
+        quantize: bool = False,
+        self_organize: bool = False,
+        kappa1: int = 1,
+        kappa2: int = 1,
+        seed: int = 0,
+    ):
+        self.cfg, self.tree = cfg, tree
+        self.client_data = client_data
+        self.momentum = momentum
+        self.quantize = quantize
+        self.self_organize = self_organize
+        self.kappa1, self.kappa2 = kappa1, kappa2
+        self.comm = CommMeter()
+        self.rng = np.random.default_rng(seed)
+
+        init_fn, apply_fn = get_fl_model(cfg.end_model)
+        self.apply_fn = apply_fn
+        self.global_params = init_fn(
+            jax.random.PRNGKey(seed), cfg.num_classes, cfg.image_size
+        )
+        self.opt = {
+            v: adamw_init(self.global_params) for v in tree.leaves
+        }
+        self.step_fn = _local_train_fn(apply_fn, cfg.lr)
+        self._momentum_buf = None
+        self._nfloats = _num_floats(self.global_params)
+
+    def _client_update(self, v: str, params):
+        x, y = self.client_data[v]
+        p = params
+        opt = self.opt[v]
+        n = len(y)
+        bs = min(self.cfg.batch_size, n)
+        for _ in range(self.cfg.local_steps * self.kappa1):
+            idx = self.rng.choice(n, size=bs, replace=n < bs)
+            p, opt, _ = self.step_fn(p, opt, jnp.asarray(x[idx]), jnp.asarray(y[idx]))
+        self.opt[v] = opt
+        return p
+
+    def _maybe_cluster(self):
+        """DemLearn-lite: re-assign clients to edges by label-histogram
+        k-means (self-organizing hierarchy)."""
+        if not self.self_organize:
+            return
+        C = self.cfg.num_classes
+        leaves = self.tree.leaves
+        hists = np.stack([
+            np.bincount(self.client_data[v][1], minlength=C) for v in leaves
+        ]).astype(np.float64)
+        hists /= hists.sum(1, keepdims=True)
+        edges = [v for v in self.tree.nodes
+                 if not self.tree.is_leaf(v) and v != self.tree.root]
+        k = len(edges)
+        centers = hists[self.rng.choice(len(leaves), k, replace=False)]
+        for _ in range(5):
+            d = ((hists[:, None] - centers[None]) ** 2).sum(-1)
+            assign = d.argmin(1)
+            for j in range(k):
+                sel = hists[assign == j]
+                if len(sel):
+                    centers[j] = sel.mean(0)
+        for i, v in enumerate(leaves):
+            target = edges[int(assign[i])]
+            if self.tree.parent[v] != target:
+                self.tree.migrate(v, target)
+
+    def train_round(self):
+        self._maybe_cluster()
+        cfg = self.cfg
+        edge_params: dict[str, object] = {}
+        for _ in range(self.kappa2):
+            for e in self.tree.children[self.tree.root]:
+                clients = [c for c in self.tree.children[e] if self.tree.is_leaf(c)]
+                if not clients:
+                    edge_params[e] = self.global_params
+                    continue
+                updated, weights = [], []
+                for c in clients:
+                    p = self._client_update(c, edge_params.get(e, self.global_params))
+                    if self.quantize:
+                        base = edge_params.get(e, self.global_params)
+                        delta = jax.tree.map(lambda a, b: a - b, p, base)
+                        delta = _quantize(delta, rng=self.rng)
+                        p = jax.tree.map(lambda b, d: b + d, base, delta)
+                    updated.append(p)
+                    weights.append(len(self.client_data[c][1]))
+                    # up + down parameter transfer
+                    self.comm.record("end-edge", 2 * self._nfloats, "params")
+                edge_params[e] = aggregate_params(updated, weights)
+        # cloud aggregation
+        ws = [
+            sum(len(self.client_data[c][1]) for c in self.tree.leaf_set(e))
+            for e in self.tree.children[self.tree.root]
+        ]
+        agg = aggregate_params(
+            [edge_params[e] for e in self.tree.children[self.tree.root]], ws
+        )
+        for _ in self.tree.children[self.tree.root]:
+            self.comm.record("edge-cloud", 2 * self._nfloats, "params")
+        if self.momentum:
+            if self._momentum_buf is None:
+                self._momentum_buf = jax.tree.map(jnp.zeros_like, agg)
+            delta = jax.tree.map(lambda a, b: a - b, agg, self.global_params)
+            self._momentum_buf = jax.tree.map(
+                lambda m, d: self.momentum * m + d, self._momentum_buf, delta
+            )
+            agg = jax.tree.map(
+                lambda g, m: g + m, self.global_params, self._momentum_buf
+            )
+        self.global_params = agg
+
+    def cloud_params(self):
+        return self.global_params
+
+    def cloud_apply(self):
+        return self.apply_fn
+
+
+class FlatFedAvg(HierarchicalFedAvg):
+    """Two-tier FedAvg: one 'edge' == the server."""
+
+    def __init__(self, cfg: FLConfig, client_data, *, seed: int = 0):
+        tree = Tree.three_tier(1, cfg.num_clients)
+        super().__init__(cfg, tree, client_data, seed=seed)

@@ -1,0 +1,36 @@
+"""Communication accounting (paper Table VII).
+
+Every transfer between a node and its parent is recorded by link tier:
+  "end-edge"   leaf <-> its parent
+  "edge-cloud" non-leaf <-> root
+  "other"      deeper hierarchies
+Parameter-aggregation protocols move |W| floats both ways per round;
+BSBODP moves |ε|+1 per sample once (init) and (|z|+1) per sample per
+round per direction — exactly the complexity rows of Table VII.
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+
+BYTES_PER_FLOAT = 4
+
+
+class CommMeter:
+    def __init__(self):
+        self.bytes = defaultdict(float)
+        self.events = defaultdict(int)
+
+    def record(self, link: str, num_floats: float, note: str = ""):
+        self.bytes[link] += num_floats * BYTES_PER_FLOAT
+        self.events[link] += 1
+
+    def link_kind(self, tree, child: str) -> str:
+        parent = tree.parent[child]
+        if tree.is_leaf(child):
+            return "end-edge"
+        if parent == tree.root:
+            return "edge-cloud"
+        return "other"
+
+    def summary(self) -> dict[str, float]:
+        return dict(self.bytes)

@@ -1,0 +1,133 @@
+"""FL experiment engine: builds the dataset/partition/topology/autoencoder,
+runs the selected algorithm for R rounds, records the cloud-model accuracy
+curve and communication bytes (the quantities behind paper Tables III-VII
+and Fig. 5).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+import numpy as np
+
+from repro.configs.base import FLConfig
+from repro.core.fedeec import FedEEC
+from repro.core.topology import Tree
+from repro.data.partition import dirichlet_partition
+from repro.data.synthetic import make_dataset
+from repro.fl.baselines import FlatFedAvg, HierarchicalFedAvg
+from repro.fl.metrics import accuracy
+from repro.models.autoencoder import pretrain_autoencoder
+
+ALGORITHMS = (
+    "fedeec", "fedagg", "hierfavg", "hiermo", "hierqsgd", "demlearn", "fedavg",
+)
+
+
+@dataclass
+class RunResult:
+    algorithm: str
+    cfg: FLConfig
+    acc_curve: list[float] = field(default_factory=list)
+    best_acc: float = 0.0
+    comm_bytes: dict[str, float] = field(default_factory=dict)
+    wall_s: float = 0.0
+
+    @property
+    def final_acc(self) -> float:
+        return self.acc_curve[-1] if self.acc_curve else 0.0
+
+
+_AUTO_CACHE: dict = {}
+
+
+def _pretrained_auto(cfg: FLConfig, x_open):
+    """The frozen autoencoder depends only on the open split — cache it
+    per (dataset, image, embed_dim, seed) within the process."""
+    key = (cfg.dataset, cfg.image_size, cfg.embed_dim, cfg.seed)
+    if key not in _AUTO_CACHE:
+        _AUTO_CACHE[key] = pretrain_autoencoder(
+            jax.random.PRNGKey(cfg.seed + 7),
+            x_open,
+            image=cfg.image_size,
+            embed_dim=cfg.embed_dim,
+        )
+    return _AUTO_CACHE[key]
+
+
+def build_problem(cfg: FLConfig):
+    """dataset + dirichlet partition + tree + pre-trained autoencoder."""
+    ds = make_dataset(
+        cfg.dataset,
+        num_train=cfg.num_clients * cfg.samples_per_client,
+        num_test=cfg.test_samples,
+        image=cfg.image_size,
+        num_classes=cfg.num_classes,
+        seed=cfg.seed,
+    )
+    parts = dirichlet_partition(
+        ds.y_train, cfg.num_clients, cfg.dirichlet_alpha, seed=cfg.seed
+    )
+    tree = Tree.three_tier(cfg.num_edges, cfg.num_clients)
+    client_data = {
+        f"client{i}": (ds.x_train[parts[i]], ds.y_train[parts[i]])
+        for i in range(cfg.num_clients)
+    }
+    auto = _pretrained_auto(cfg, ds.x_open)
+    return ds, tree, client_data, auto
+
+
+def make_trainer(algorithm: str, cfg: FLConfig, tree, client_data, auto):
+    a = algorithm.lower()
+    if a == "fedeec":
+        return FedEEC(cfg, tree, client_data, auto, use_skr=True, seed=cfg.seed)
+    if a == "fedagg":
+        return FedEEC(cfg, tree, client_data, auto, use_skr=False, seed=cfg.seed)
+    if a == "hierfavg":
+        return HierarchicalFedAvg(cfg, tree, client_data, seed=cfg.seed)
+    if a == "hiermo":
+        return HierarchicalFedAvg(cfg, tree, client_data, momentum=0.9, seed=cfg.seed)
+    if a == "hierqsgd":
+        return HierarchicalFedAvg(cfg, tree, client_data, quantize=True, seed=cfg.seed)
+    if a == "demlearn":
+        return HierarchicalFedAvg(cfg, tree, client_data, self_organize=True, seed=cfg.seed)
+    if a == "fedavg":
+        return FlatFedAvg(cfg, client_data, seed=cfg.seed)
+    raise KeyError(f"unknown algorithm {algorithm!r}; known: {ALGORITHMS}")
+
+
+def run_experiment(
+    algorithm: str,
+    cfg: FLConfig,
+    *,
+    rounds: int | None = None,
+    eval_every: int = 1,
+    verbose: bool = False,
+    migration_round: int | None = None,
+) -> RunResult:
+    ds, tree, client_data, auto = build_problem(cfg)
+    trainer = make_trainer(algorithm, cfg, tree, client_data, auto)
+    rounds = rounds if rounds is not None else cfg.rounds
+    res = RunResult(algorithm, cfg)
+    t0 = time.time()
+    for r in range(rounds):
+        if migration_round is not None and r == migration_round and hasattr(trainer, "migrate"):
+            # move one client to a different edge mid-training (§IV-E demo)
+            leaf = trainer.tree.leaves[0]
+            edges = [v for v in trainer.tree.nodes
+                     if not trainer.tree.is_leaf(v) and v != trainer.tree.root]
+            cur = trainer.tree.parent[leaf]
+            target = next(e for e in edges if e != cur)
+            trainer.migrate(leaf, target)
+        trainer.train_round()
+        if (r + 1) % eval_every == 0 or r == rounds - 1:
+            acc = accuracy(trainer.cloud_apply(), trainer.cloud_params(),
+                           ds.x_test, ds.y_test)
+            res.acc_curve.append(acc)
+            res.best_acc = max(res.best_acc, acc)
+            if verbose:
+                print(f"  [{algorithm}] round {r+1:3d}  cloud acc {acc:.4f}", flush=True)
+    res.comm_bytes = trainer.comm.summary()
+    res.wall_s = time.time() - t0
+    return res

@@ -1,0 +1,15 @@
+"""Evaluation metrics for the FL plane."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def accuracy(apply_fn, params, x, y, batch: int = 256) -> float:
+    correct = 0
+    fn = jax.jit(lambda p, xb: jnp.argmax(apply_fn(p, xb), axis=-1))
+    for i in range(0, len(y), batch):
+        pred = np.asarray(fn(params, jnp.asarray(x[i : i + batch])))
+        correct += int((pred == y[i : i + batch]).sum())
+    return correct / len(y)

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the perf-critical compute of FedEEC-at-scale:
+
+  distill_loss     fused temperature-softmax CE + KL over vocab tiles
+                   (BSBODP Eq. 3/32 hot loop; custom VJP)
+  skr_rectify      batched SKR rectification map (Eq. 31)
+  flash_attention  GQA causal/sliding-window attention (dense archs)
+  rwkv6_scan       RWKV6 time-mix recurrence with VMEM-resident state
+
+Each kernel: <name>.py (pl.pallas_call + BlockSpec), a jit'd wrapper in
+ops.py, and a pure-jnp oracle in ref.py.
+"""

@@ -1,0 +1,98 @@
+"""Pure-jnp oracles for every Pallas kernel (the numerics ground truth and
+the CPU execution path). Each function mirrors its kernel's signature."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# --- skr_rectify -----------------------------------------------------------
+
+
+def skr_rectify_ref(probs, labels, qbar, counts):
+    from repro.core.skr import rectify_given_qbar
+
+    return rectify_given_qbar(probs, labels, qbar, counts)
+
+
+# --- distill loss (fused CE + beta*KL over the vocab axis) ------------------
+
+
+def distill_loss_ref(logits, labels, teacher_logprobs, beta, label_weight=1.0):
+    """Per-row: CE(softmax(z), y) + beta * KL(softmax(z) || exp(tlq)).
+
+    logits: (N, V) student logits (fp32); labels (N,) int32;
+    teacher_logprobs: (N, V) log of the (possibly rectified) teacher probs.
+    Returns per-row losses (N,).
+    """
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1, keepdims=True)
+    logp = logits - logz
+    ce = -jnp.take_along_axis(logp, labels[:, None], axis=1)[:, 0]
+    sp = jnp.exp(logp)
+    kl = jnp.sum(sp * (logp - teacher_logprobs), axis=-1)
+    return label_weight * ce + beta * kl
+
+
+def distill_loss_grad_ref(logits, labels, teacher_logprobs, beta, label_weight=1.0):
+    """d(per-row loss)/d logits — oracle for the custom-VJP bwd kernel."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1, keepdims=True)
+    logp = logits - logz
+    sp = jnp.exp(logp)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=jnp.float32)
+    kl = jnp.sum(sp * (logp - teacher_logprobs), axis=-1, keepdims=True)
+    dce = sp - onehot
+    dkl = sp * ((logp - teacher_logprobs) - kl)
+    return label_weight * dce + beta * dkl
+
+
+def softmax_xent_ref(logits, labels):
+    """Plain CE per row (the beta=0 special case used for the LM loss)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=1)[:, 0]
+    return logz - gold
+
+
+# --- flash attention ---------------------------------------------------------
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, q_offset=0):
+    """q (B,Sq,N,H), k/v (B,Sk,K,H). GQA; absolute-position masks."""
+    B, Sq, N, H = q.shape
+    K = k.shape[2]
+    G = N // K
+    qf = q.astype(jnp.float32) * (H**-0.5)
+    qf = qf.reshape(B, Sq, K, G, H)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qf, k.astype(jnp.float32))
+    qpos = jnp.arange(Sq) + q_offset
+    kpos = jnp.arange(k.shape[1])
+    m = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        m &= qpos[:, None] >= kpos[None, :]
+    if window:
+        m &= kpos[None, :] > (qpos[:, None] - window)
+    s = jnp.where(m[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, N, v.shape[-1]).astype(q.dtype)
+
+
+# --- rwkv6 scan --------------------------------------------------------------
+
+
+def rwkv6_scan_ref(r, k, v, w, u, s0):
+    """Exact RWKV6 recurrence. r/k/v/w: (B,T,H,hd) fp32, u: (H,hd),
+    s0: (B,H,hd,hd). Returns (y (B,T,H,hd), sT)."""
+
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp
+        kv = k_t[..., :, None] * v_t[..., None, :]
+        out = jnp.einsum("bhk,bhkv->bhv", r_t, s + u[None, ..., None] * kv)
+        s = w_t[..., :, None] * s + kv
+        return s, out
+
+    xs = tuple(jnp.moveaxis(t.astype(jnp.float32), 1, 0) for t in (r, k, v, w))
+    sT, ys = jax.lax.scan(step, s0.astype(jnp.float32), xs)
+    return jnp.moveaxis(ys, 0, 1), sT

@@ -1,0 +1,94 @@
+"""Pallas TPU kernel: RWKV6 ("Finch") time-mix recurrence.
+
+    out_t = r_t · (S_{t-1} + diag(u) k_t v_tᵀ)
+    S_t   = diag(w_t) S_{t-1} + k_t v_tᵀ          (w_t: data-dependent decay)
+
+Grid: (batch, heads, time_chunks); the time axis is sequential
+("arbitrary") with the (head_dim x head_dim) state carried in VMEM scratch
+across chunks — the HBM traffic is exactly one read of (r,k,v,w) and one
+write of y per token, with the state resident on-chip (the TPU-native
+adaptation of RWKV's CUDA kernel, which keeps state in registers/smem).
+Inside a chunk the recurrence is stepped with a fori_loop over VMEM tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, y_ref, sT_ref, s_s,
+            *, chunk: int, n_t: int):
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        s_s[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    u = u_ref[0].astype(jnp.float32)  # (hd,)
+
+    def step(i, s):
+        r_i = r_ref[0, i, 0, :].astype(jnp.float32)  # (hd,)
+        k_i = k_ref[0, i, 0, :].astype(jnp.float32)
+        v_i = v_ref[0, i, 0, :].astype(jnp.float32)
+        w_i = w_ref[0, i, 0, :].astype(jnp.float32)
+        kv = k_i[:, None] * v_i[None, :]  # (hd, hd)
+        out = r_i @ (s + u[:, None] * kv)  # (hd,)
+        y_ref[0, i, 0, :] = out.astype(y_ref.dtype)
+        return w_i[:, None] * s + kv
+
+    s = jax.lax.fori_loop(0, chunk, step, s_s[...])
+    s_s[...] = s
+
+    @pl.when(t == n_t - 1)
+    def _fin():
+        sT_ref[0, 0] = s.astype(sT_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rwkv6_scan(r, k, v, w, u, s0, *, chunk: int = 64, interpret: bool = True):
+    """r/k/v/w: (B, T, H, hd); u: (H, hd); s0: (B, H, hd, hd).
+
+    Returns (y (B, T, H, hd) fp32, sT (B, H, hd, hd) fp32). T is padded to a
+    chunk multiple with zeros (w=1 ⇒ padded steps leave the state intact...
+    padded w is 0 here, so the final state is taken from the last REAL step
+    by padding with w=1, k=0: state unchanged, outputs of padded rows unused).
+    """
+    B, T, H, hd = r.shape
+    t_pad = (-T) % chunk
+    if t_pad:
+        zpad = lambda x: jnp.pad(x, ((0, 0), (0, t_pad), (0, 0), (0, 0)))
+        r, k, v = zpad(r), zpad(k), zpad(v)
+        w = jnp.pad(w, ((0, 0), (0, t_pad), (0, 0), (0, 0)), constant_values=1.0)
+    Tp = r.shape[1]
+    n_t = Tp // chunk
+    grid = (B, H, n_t)
+    y, sT = pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk, n_t=n_t),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, hd), lambda b, h, t: (b, t, h, 0)),
+            pl.BlockSpec((1, chunk, 1, hd), lambda b, h, t: (b, t, h, 0)),
+            pl.BlockSpec((1, chunk, 1, hd), lambda b, h, t: (b, t, h, 0)),
+            pl.BlockSpec((1, chunk, 1, hd), lambda b, h, t: (b, t, h, 0)),
+            pl.BlockSpec((1, hd), lambda b, h, t: (h, 0)),
+            pl.BlockSpec((1, 1, hd, hd), lambda b, h, t: (b, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, hd), lambda b, h, t: (b, t, h, 0)),
+            pl.BlockSpec((1, 1, hd, hd), lambda b, h, t: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Tp, H, hd), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, hd, hd), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(r, k, v, w, u, s0)
+    return y[:, :T], sT

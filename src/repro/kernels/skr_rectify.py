@@ -1,0 +1,87 @@
+"""Pallas TPU kernel: batched SKR rectification (paper Eq. 31).
+
+Given temperature-softmax probabilities P (N, C), per-row label-class
+probability p_c, the misattribution flag, and the queue-mean q̄ of the label
+class, produce the rectified knowledge Q:
+
+    Q[i, j] = q̄_i                           if rectify_i and j == label_i
+            = P[i, j]·(1-q̄_i)/(1-p_c_i)     if rectify_i and j != label_i
+            = P[i, j]                        otherwise
+
+The kernel is tiled (block_n x block_c) over the (N, C) probability matrix —
+at LM scale C is the vocabulary (up to 262k), so the whole matrix never
+sits in VMEM; row scalars are broadcast per tile. Lane dim (C) tiles are
+multiples of 128; sublane (N) tiles multiples of 8 (fp32 VREG tiling).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(p_ref, pc_ref, do_ref, qb_ref, label_ref, out_ref, *, block_c: int):
+    j = pl.program_id(1)
+    p = p_ref[...]  # (bn, bc)
+    pc = pc_ref[...]  # (bn,)
+    do = do_ref[...]
+    qb = qb_ref[...]
+    label = label_ref[...]
+    scale = (1.0 - qb) / jnp.maximum(1.0 - pc, 1e-12)
+    rect = p * scale[:, None]
+    col = j * block_c + jax.lax.broadcasted_iota(jnp.int32, p.shape, 1)
+    is_label = col == label[:, None]
+    rect = jnp.where(is_label, qb[:, None], rect)
+    out_ref[...] = jnp.where(do[:, None] > 0, rect, p)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_c", "interpret"))
+def skr_rectify(
+    probs,
+    labels,
+    qbar,
+    counts,
+    *,
+    block_n: int = 8,
+    block_c: int = 128,
+    interpret: bool = True,
+):
+    """probs (N, C) fp32; labels (N,) int32; qbar/counts (C,).
+
+    Returns rectified (N, C). Row statistics (p_c, misattribution flag) are
+    jnp reductions; the O(N·C) rescale/select is the Pallas kernel.
+    """
+    N, C = probs.shape
+    p_c = jnp.take_along_axis(probs, labels[:, None], axis=1)[:, 0]
+    mis = jnp.argmax(probs, axis=1) != labels
+    do = (mis & (counts[labels] > 0)).astype(jnp.int32)
+    qb = qbar[labels]
+
+    # pad to tile multiples
+    n_pad = (-N) % block_n
+    c_pad = (-C) % block_c
+    p_in = jnp.pad(probs, ((0, n_pad), (0, c_pad)))
+    pc_in = jnp.pad(p_c, (0, n_pad))
+    do_in = jnp.pad(do, (0, n_pad))
+    qb_in = jnp.pad(qb, (0, n_pad))
+    lb_in = jnp.pad(labels, (0, n_pad), constant_values=-1)
+    Np, Cp = p_in.shape
+
+    grid = (Np // block_n, Cp // block_c)
+    out = pl.pallas_call(
+        functools.partial(_kernel, block_c=block_c),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, block_c), lambda i, j: (i, j)),
+            pl.BlockSpec((block_n,), lambda i, j: (i,)),
+            pl.BlockSpec((block_n,), lambda i, j: (i,)),
+            pl.BlockSpec((block_n,), lambda i, j: (i,)),
+            pl.BlockSpec((block_n,), lambda i, j: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block_n, block_c), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Np, Cp), probs.dtype),
+        interpret=interpret,
+    )(p_in, pc_in, do_in, qb_in, lb_in)
+    return out[:N, :C]

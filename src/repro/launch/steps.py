@@ -1,0 +1,142 @@
+"""Jit-able train / prefill / serve steps and their input specs.
+
+These are shared by the real trainer (launch/train.py), the server
+(launch/serve.py), the dry-run (launch/dryrun.py), and the benchmarks.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import (
+    ModelOpts,
+    forward_decode,
+    forward_prefill,
+    forward_train,
+    init_cache,
+    init_params,
+)
+from repro.optim import adamw_init, adamw_update, clip_by_global_norm
+
+
+def default_opts(cfg, mesh=None, *, seq_parallel: bool = False, **overrides) -> ModelOpts:
+    """ModelOpts adapted to a mesh: kv replication to tile the model axis,
+    chunked attention for long sequences, expert padding to the model axis.
+    seq_parallel=True adds a Megatron-style sequence-parallel constraint on
+    the residual stream (activations sharded over 'model' along seq)."""
+    tp = mesh.shape.get("model", 1) if mesh is not None else 1
+    kv_mult = 1
+    if (
+        cfg.num_kv_heads
+        and tp > 1
+        and cfg.num_kv_heads < tp
+        and tp % cfg.num_kv_heads == 0
+        # replication must preserve GQA grouping: q heads must tile the
+        # replicated kv heads (llama3.2's 24q/8kv cannot replicate to 16)
+        and cfg.num_heads % (cfg.num_kv_heads * (tp // cfg.num_kv_heads)) == 0
+    ):
+        kv_mult = tp // cfg.num_kv_heads
+    act_spec = None
+    if seq_parallel and mesh is not None and tp > 1:
+        from jax.sharding import PartitionSpec as P
+
+        dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        act_spec = P(dp, "model", None)
+    kw = dict(
+        kv_mult=kv_mult,
+        attn_chunk=1024,
+        expert_pad_to=tp if cfg.num_experts else 1,
+        remat=True,
+        act_spec=act_spec,
+    )
+    kw.update(overrides)
+    return ModelOpts(**kw)
+
+
+# ---------------------------------------------------------------------------
+# steps
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg, opts: ModelOpts, *, lr: float = 3e-4, clip: float = 1.0):
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            return forward_train(cfg, opts, p, batch)
+
+        (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        grads, gnorm = clip_by_global_norm(grads, clip)
+        params, opt_state = adamw_update(grads, opt_state, params, lr=lr)
+        metrics = {"loss": loss, "ce": aux["ce"], "grad_norm": gnorm,
+                   "lb_loss": aux["lb_loss"]}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg, opts: ModelOpts):
+    def prefill_step(params, batch):
+        return forward_prefill(cfg, opts, params, batch)
+
+    return prefill_step
+
+
+def make_serve_step(cfg, opts: ModelOpts):
+    def serve_step(params, cache, batch):
+        logits, new_cache = forward_decode(cfg, opts, params, batch, cache)
+        next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_token, logits, new_cache
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg, shape_cfg, opts: ModelOpts) -> dict[str, Any]:
+    """ShapeDtypeStructs for the batch of one (arch x input-shape) workload.
+
+    VLM: the assigned seq_len counts media + text tokens (anyres patch
+    embeddings are provided by the stubbed vision tower).
+    Audio: seq_len is the decoder length; the encoder consumes stubbed
+    (B, 1500, d) frame embeddings.
+    """
+    B, S, mode = shape_cfg.global_batch, shape_cfg.seq_len, shape_cfg.mode
+    cdt = jnp.dtype(cfg.compute_dtype)
+    i32 = jnp.int32
+    sd = jax.ShapeDtypeStruct
+    if mode in ("train", "prefill"):
+        text = S
+        specs: dict[str, Any] = {}
+        if cfg.frontend == "vision_stub":
+            media = min(cfg.num_media_tokens, S // 2)
+            text = S - media
+            specs["media"] = sd((B, media, cfg.d_model), cdt)
+        specs["tokens"] = sd((B, text), i32)
+        if mode == "train":
+            specs["labels"] = sd((B, text), i32)
+        if cfg.enc_dec:
+            specs["frames"] = sd((B, cfg.enc_seq_len, cfg.d_model), cdt)
+        return specs
+    # decode: one token against an S-token cache
+    return {"token": sd((B, 1), i32), "pos": sd((), i32)}
+
+
+def cache_shapes(cfg, opts: ModelOpts, shape_cfg, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.compute_dtype)
+    return jax.eval_shape(
+        lambda: init_cache(cfg, opts, shape_cfg.global_batch, shape_cfg.seq_len, dtype)
+    )
+
+
+def param_shapes(cfg, opts: ModelOpts):
+    return jax.eval_shape(partial(init_params, cfg=cfg, opts=opts),
+                          jax.random.PRNGKey(0))
+
+
+def opt_shapes(params_shapes):
+    return jax.eval_shape(adamw_init, params_shapes)

@@ -1,0 +1,9 @@
+"""Model zoo: production-scale transformer families + paper-plane CNNs."""
+from repro.models.transformer import (  # noqa: F401
+    ModelOpts,
+    forward_decode,
+    forward_prefill,
+    forward_train,
+    init_cache,
+    init_params,
+)

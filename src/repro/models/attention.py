@@ -1,0 +1,347 @@
+"""Attention: GQA (full / sliding-window / causal, chunked online-softmax) and
+MLA (DeepSeek multi-head latent attention, with an absorbed decode path).
+
+Conventions
+-----------
+* q/k/v layout: (batch, seq, heads, head_dim).
+* KV caches: dict(k=(B, S, K, H), v=(B, S, K, H)) — or for MLA,
+  dict(c_kv=(B, S, lora), k_rope=(B, S, rope_dim)).
+* ``kv_mult`` replicates KV heads at build time so that the kv-head axis is
+  divisible by the tensor-parallel mesh axis (MaxText-style replication; the
+  replicas are independent parameters after init).
+* The pure-jnp chunked path here is both the CPU execution path and the
+  numerics oracle for the Pallas flash-attention kernel
+  (``repro.kernels.flash_attention``).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, dense_init, rope_angles, rmsnorm
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+
+def init_attn(key, cfg, dtype, kv_mult: int = 1):
+    d, n, hd = cfg.d_model, cfg.num_heads, cfg.head_dim
+    kv = cfg.num_kv_heads * kv_mult
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, n * hd, dtype),
+        "wk": dense_init(ks[1], d, kv * hd, dtype),
+        "wv": dense_init(ks[2], d, kv * hd, dtype),
+        "wo": dense_init(ks[3], n * hd, d, dtype, scale=(n * hd) ** -0.5),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), jnp.float32)
+        p["k_norm"] = jnp.zeros((hd,), jnp.float32)
+    return p
+
+
+def _split_heads(x, n, hd):
+    return x.reshape(x.shape[:-1] + (n, hd))
+
+
+def mha(
+    q,
+    k,
+    v,
+    *,
+    q_positions,
+    k_positions,
+    causal: bool = True,
+    window: int = 0,
+    chunk: int = 0,
+    valid_len=None,
+):
+    """Grouped-query attention with absolute-position masking.
+
+    q: (B, Sq, N, H); k/v: (B, Sk, K, Hv). N % K == 0.
+    window > 0 limits attention to the trailing `window` positions.
+    chunk > 0 uses an online-softmax scan over KV chunks (memory-bounded path
+    for long sequences; the jnp analogue of flash attention).
+    valid_len: optional (B,) or scalar — kv positions >= valid_len are masked.
+    """
+    B, Sq, N, H = q.shape
+    K = k.shape[2]
+    G = N // K
+    scale = H**-0.5
+    qf = (q.astype(jnp.float32) * scale).reshape(B, Sq, K, G, H)
+
+    def mask_for(kpos):
+        # (Sq, Ck) boolean validity mask from absolute positions
+        m = jnp.ones((Sq, kpos.shape[0]), bool)
+        if causal:
+            m &= q_positions[:, None] >= kpos[None, :]
+        if window:
+            m &= kpos[None, :] > (q_positions[:, None] - window)
+        if valid_len is not None:
+            m &= kpos[None, :] < valid_len
+        return m
+
+    if not chunk or k.shape[1] <= chunk:
+        kf = k.astype(jnp.float32)
+        vf = v.astype(jnp.float32)
+        s = jnp.einsum("bqkgh,bskh->bkgqs", qf, kf)
+        m = mask_for(k_positions)
+        s = jnp.where(m[None, None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bkgqs,bskh->bqkgh", p, vf)
+        return o.reshape(B, Sq, N, v.shape[-1]).astype(q.dtype)
+
+    # --- online-softmax over KV chunks (flash-style; lax.scan) -------------
+    Sk = k.shape[1]
+    assert Sk % chunk == 0, (Sk, chunk)
+    n_chunks = Sk // chunk
+    kc = k.reshape(B, n_chunks, chunk, K, -1)
+    vc = v.reshape(B, n_chunks, chunk, K, -1)
+    pc = k_positions.reshape(n_chunks, chunk)
+
+    def body(carry, xs):
+        m_i, l_i, acc = carry
+        k_i, v_i, kpos = xs  # k_i: (B, chunk, K, H)
+        s = jnp.einsum("bqkgh,bskh->bkgqs", qf, k_i.astype(jnp.float32))
+        msk = mask_for(kpos)
+        s = jnp.where(msk[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m_i, s.max(axis=-1))
+        alpha = jnp.exp(m_i - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l_i * alpha + p.sum(axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bkgqs,bskh->bkgqh", p, v_i.astype(jnp.float32)
+        )
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((B, K, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, K, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, K, G, Sq, v.shape[-1]), jnp.float32)
+    (m_f, l_f, acc), _ = jax.lax.scan(
+        body,
+        (m0, l0, a0),
+        (
+            jnp.moveaxis(kc, 1, 0),
+            jnp.moveaxis(vc, 1, 0),
+            pc,
+        ),
+    )
+    o = acc / jnp.maximum(l_f, 1e-30)[..., None]
+    o = jnp.moveaxis(o.reshape(B, K * G, Sq, -1), 1, 2)
+    return o.astype(q.dtype)
+
+
+def attn_forward(
+    cfg,
+    params,
+    x,
+    *,
+    positions,
+    theta: float,
+    window: int = 0,
+    cache: Optional[dict] = None,
+    cache_pos=None,
+    chunk: int = 0,
+    kv_mult: int = 1,
+    return_kv: bool = False,
+):
+    """Self-attention forward.
+
+    Modes:
+      * train/prefill: cache is None; full-sequence causal attention.
+        return_kv=True additionally returns the (k, v) to seed a cache.
+      * decode: cache holds (B, S, K, H); x is (B, 1, d); cache_pos is the
+        scalar write/attend position. Returns (y, updated cache).
+    """
+    B, S, _ = x.shape
+    n, hd = cfg.num_heads, cfg.head_dim
+    kv_heads = cfg.num_kv_heads * kv_mult
+
+    q = _split_heads(x @ params["wq"], n, hd)
+    k = _split_heads(x @ params["wk"], kv_heads, hd)
+    v = _split_heads(x @ params["wv"], kv_heads, hd)
+
+    if cfg.qk_norm:
+        q = rmsnorm(q, params["q_norm"])
+        k = rmsnorm(k, params["k_norm"])
+
+    sin, cos = rope_angles(positions, hd, theta)
+    q = apply_rope(q, sin, cos)
+    k = apply_rope(k, sin, cos)
+
+    if cache is None:
+        o = mha(
+            q, k, v,
+            q_positions=positions,
+            k_positions=positions,
+            causal=True,
+            window=window,
+            chunk=chunk,
+        )
+        y = o.reshape(B, S, n * hd) @ params["wo"]
+        if return_kv:
+            return y, {"k": k, "v": v}
+        return y, None
+
+    # decode: single new token at cache_pos
+    kc = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, cache_pos, 0, 0))
+    vc = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, cache_pos, 0, 0))
+    k_positions = jnp.arange(kc.shape[1])
+    o = mha(
+        q, kc, vc,
+        q_positions=positions,
+        k_positions=k_positions,
+        causal=True,
+        window=window,
+        valid_len=cache_pos + 1,
+    )
+    y = o.reshape(B, S, n * hd) @ params["wo"]
+    return y, {"k": kc, "v": vc}
+
+
+def init_kv_cache(cfg, batch: int, seq: int, dtype, kv_mult: int = 1):
+    kv = cfg.num_kv_heads * kv_mult
+    shape = (batch, seq, kv, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+# ---------------------------------------------------------------------------
+# Cross attention (whisper decoder)
+# ---------------------------------------------------------------------------
+
+
+def init_cross_attn(key, cfg, dtype):
+    d, n, hd = cfg.d_model, cfg.num_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], d, n * hd, dtype),
+        "wk": dense_init(ks[1], d, n * hd, dtype),
+        "wv": dense_init(ks[2], d, n * hd, dtype),
+        "wo": dense_init(ks[3], n * hd, d, dtype, scale=(n * hd) ** -0.5),
+    }
+
+
+def cross_attn_forward(cfg, params, x, enc_out):
+    """x: (B, S, d) decoder states; enc_out: (B, Se, d) encoder states."""
+    B, S, _ = x.shape
+    n, hd = cfg.num_heads, cfg.head_dim
+    q = _split_heads(x @ params["wq"], n, hd)
+    k = _split_heads(enc_out @ params["wk"], n, hd)
+    v = _split_heads(enc_out @ params["wv"], n, hd)
+    o = mha(
+        q, k, v,
+        q_positions=jnp.arange(S),
+        k_positions=jnp.arange(enc_out.shape[1]),
+        causal=False,
+    )
+    return o.reshape(B, S, n * hd) @ params["wo"]
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2)
+# ---------------------------------------------------------------------------
+
+
+def init_mla(key, cfg, dtype):
+    d, n = cfg.d_model, cfg.num_heads
+    nope, rope_d, vd, lora = (
+        cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim, cfg.kv_lora_rank,
+    )
+    ks = jax.random.split(key, 5)
+    return {
+        "wq": dense_init(ks[0], d, n * (nope + rope_d), dtype),
+        "w_dkv": dense_init(ks[1], d, lora + rope_d, dtype),
+        "kv_norm": jnp.zeros((lora,), jnp.float32),
+        "w_uk": dense_init(ks[2], lora, n * nope, dtype),
+        "w_uv": dense_init(ks[3], lora, n * vd, dtype),
+        "wo": dense_init(ks[4], n * vd, d, dtype, scale=(n * vd) ** -0.5),
+    }
+
+
+def mla_forward(
+    cfg,
+    params,
+    x,
+    *,
+    positions,
+    theta: float,
+    cache: Optional[dict] = None,
+    cache_pos=None,
+    chunk: int = 0,
+    return_kv: bool = False,
+):
+    """MLA. Prefill/train: expanded computation. Decode: absorbed — attends
+    directly over the compressed (c_kv, k_rope) cache of 576 dims/token."""
+    B, S, _ = x.shape
+    n = cfg.num_heads
+    nope, rope_d, vd, lora = (
+        cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim, cfg.kv_lora_rank,
+    )
+
+    q = _split_heads(x @ params["wq"], n, nope + rope_d)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    sin, cos = rope_angles(positions, rope_d, theta)
+    q_rope = apply_rope(q_rope, sin, cos)
+
+    dkv = x @ params["w_dkv"]
+    c_kv = rmsnorm(dkv[..., :lora], params["kv_norm"])
+    k_rope = apply_rope(dkv[..., None, lora:], sin, cos)[:, :, 0]  # (B,S,rope)
+
+    scale = (nope + rope_d) ** -0.5
+
+    if cache is None:
+        # expanded path
+        k_nope = _split_heads(c_kv @ params["w_uk"], n, nope)
+        v = _split_heads(c_kv @ params["w_uv"], n, vd)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None], (B, S, n, rope_d))],
+            axis=-1,
+        )
+        qfull = jnp.concatenate([q_nope, q_rope], axis=-1)
+        o = mha(
+            qfull, k, v,
+            q_positions=positions,
+            k_positions=positions,
+            causal=True,
+            chunk=chunk,
+        )
+        y = o.reshape(B, S, n * vd) @ params["wo"]
+        if return_kv:
+            return y, {"c_kv": c_kv, "k_rope": k_rope}
+        return y, None
+
+    # absorbed decode
+    ckv_c = jax.lax.dynamic_update_slice(
+        cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), (0, cache_pos, 0)
+    )
+    krope_c = jax.lax.dynamic_update_slice(
+        cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), (0, cache_pos, 0)
+    )
+    w_uk = params["w_uk"].reshape(lora, n, nope)
+    # absorb W_uk into the query: q_lat (B,S,n,lora)
+    q_lat = jnp.einsum("bqnd,lnd->bqnl", q_nope.astype(jnp.float32), w_uk.astype(jnp.float32))
+    s_nope = jnp.einsum("bqnl,bsl->bnqs", q_lat, ckv_c.astype(jnp.float32))
+    s_rope = jnp.einsum("bqnd,bsd->bnqs", q_rope.astype(jnp.float32), krope_c.astype(jnp.float32))
+    s = (s_nope + s_rope) * scale
+    kpos = jnp.arange(ckv_c.shape[1])
+    valid = kpos[None, :] <= cache_pos
+    s = jnp.where(valid[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    ctx_lat = jnp.einsum("bnqs,bsl->bqnl", p, ckv_c.astype(jnp.float32))
+    w_uv = params["w_uv"].reshape(lora, n, vd)
+    ctx = jnp.einsum("bqnl,lnv->bqnv", ctx_lat, w_uv.astype(jnp.float32))
+    y = ctx.reshape(B, S, n * vd).astype(x.dtype) @ params["wo"]
+    return y, {"c_kv": ckv_c, "k_rope": krope_c}
+
+
+def init_mla_cache(cfg, batch: int, seq: int, dtype):
+    return {
+        "c_kv": jnp.zeros((batch, seq, cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, seq, cfg.qk_rope_dim), dtype),
+    }

@@ -1,0 +1,90 @@
+"""The lightweight bridge-sample autoencoder (paper Table II: M_enc 1.9K /
+M_dec 2.47K parameters; <50K total by design — intentionally low-capacity so
+embeddings cannot reconstruct fine-grained private detail, Fig. 4).
+
+* ``enc(x)``  -> embedding (B, embed_dim)  — lives only on leaf devices.
+* ``dec(e)``  -> bridge sample (B, H, W, C) — lives on every node.
+
+Pre-training happens once on a held-out "open dataset" split (stand-in for
+the paper's ImageNet pre-training) — see ``pretrain_autoencoder``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.cnn import conv, conv_init, linear_init
+
+
+def init_autoencoder(key, image=16, in_ch=3, embed_dim=32, width=16):
+    ks = jax.random.split(key, 6)
+    s = image // 4
+    return {
+        "enc": {
+            "c1": conv_init(ks[0], 3, 3, in_ch, width),
+            "c2": conv_init(ks[1], 3, 3, width, width),
+            "fc": linear_init(ks[2], s * s * width, embed_dim),
+        },
+        "dec": {
+            "fc": linear_init(ks[3], embed_dim, s * s * width),
+            "c1": conv_init(ks[4], 3, 3, width, width),
+            "c2": conv_init(ks[5], 3, 3, width, in_ch),
+        },
+    }
+
+
+def encode(params, x):
+    """x: (B, H, W, C) in [0,1] -> (B, embed_dim)."""
+    e = params["enc"]
+    h = jax.nn.relu(conv(x, e["c1"], stride=2))
+    h = jax.nn.relu(conv(h, e["c2"], stride=2))
+    h = h.reshape(h.shape[0], -1)
+    return jnp.tanh(h @ e["fc"]["w"] + e["fc"]["b"])
+
+
+def _upsample2(x):
+    B, H, W, C = x.shape
+    x = jnp.repeat(jnp.repeat(x, 2, axis=1), 2, axis=2)
+    return x
+
+
+def decode(params, e, image: int, width: int | None = None, in_ch: int = 3):
+    """e: (B, embed_dim) -> bridge samples (B, image, image, in_ch) in [0,1].
+    ``width`` is inferred from the decoder fc shape when not given."""
+    d = params["dec"]
+    s = image // 4
+    if width is None:
+        width = d["fc"]["w"].shape[1] // (s * s)
+    h = jax.nn.relu(e @ d["fc"]["w"] + d["fc"]["b"]).reshape(-1, s, s, width)
+    h = jax.nn.relu(conv(_upsample2(h), d["c1"]))
+    h = conv(_upsample2(h), d["c2"])
+    return jax.nn.sigmoid(h)
+
+
+def pretrain_autoencoder(key, images, *, image: int, embed_dim: int = 32,
+                         steps: int = 1200, lr: float = 2e-3, batch: int = 64):
+    """MSE reconstruction pre-training on the open split (Adam). Returns
+    params. The budget keeps the autoencoder <50K parameters (paper Fig. 4:
+    intentionally low-capacity so embeddings can't leak fine detail)."""
+    from repro.optim import adamw_init, adamw_update
+
+    params = init_autoencoder(key, image=image, embed_dim=embed_dim)
+
+    def loss_fn(p, xb):
+        rec = decode(p, encode(p, xb), image)
+        return jnp.mean((rec - xb) ** 2)
+
+    @jax.jit
+    def step(p, opt, xb):
+        l, g = jax.value_and_grad(loss_fn)(p, xb)
+        p, opt = adamw_update(g, opt, p, lr=lr, weight_decay=0.0)
+        return p, opt, l
+
+    opt = adamw_init(params)
+    n = images.shape[0]
+    rng = jax.random.PRNGKey(1)
+    for i in range(steps):
+        rng, k = jax.random.split(rng)
+        idx = jax.random.randint(k, (min(batch, n),), 0, n)
+        params, opt, _ = step(params, opt, images[idx])
+    return params

@@ -1,0 +1,143 @@
+"""Paper-plane models (Table II of the paper): CNN-1 / CNN-2 (end devices),
+ResNet-10 (edge), ResNet-18 (cloud). NHWC, pure-JAX.
+
+BatchNorm is replaced with GroupNorm (running statistics are ill-defined
+under federated averaging and online distillation; GN is the standard FL
+substitute — recorded in DESIGN.md §assumptions).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def conv_init(key, kh, kw, cin, cout):
+    fan_in = kh * kw * cin
+    w = jax.random.normal(key, (kh, kw, cin, cout), jnp.float32)
+    return w * (2.0 / fan_in) ** 0.5
+
+
+def conv(x, w, stride=1, padding="SAME"):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), padding, dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+
+
+def group_norm(x, scale, bias, groups=4, eps=1e-5):
+    N, H, W, C = x.shape
+    g = min(groups, C)
+    while C % g:
+        g -= 1
+    xg = x.reshape(N, H, W, g, C // g)
+    mu = xg.mean(axis=(1, 2, 4), keepdims=True)
+    var = xg.var(axis=(1, 2, 4), keepdims=True)
+    xg = (xg - mu) * jax.lax.rsqrt(var + eps)
+    return xg.reshape(N, H, W, C) * scale + bias
+
+
+def linear_init(key, din, dout):
+    return {
+        "w": jax.random.normal(key, (din, dout), jnp.float32) * (din**-0.5),
+        "b": jnp.zeros((dout,), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# CNN-1 / CNN-2 (three-layer CNNs, differ in intermediate widths)
+# ---------------------------------------------------------------------------
+
+
+def init_cnn(key, num_classes=10, widths=(8, 16, 32), in_ch=3, image=16):
+    ks = jax.random.split(key, 5)
+    c1, c2, c3 = widths
+    feat = (image // 8) ** 2 * c3  # three stride-2 pools
+    return {
+        "c1": conv_init(ks[0], 3, 3, in_ch, c1),
+        "c2": conv_init(ks[1], 3, 3, c1, c2),
+        "c3": conv_init(ks[2], 3, 3, c2, c3),
+        "fc": linear_init(ks[3], feat, num_classes),
+    }
+
+
+def apply_cnn(params, x):
+    for name in ("c1", "c2", "c3"):
+        x = conv(x, params[name], stride=1)
+        x = jax.nn.relu(x)
+        x = jax.lax.reduce_window(
+            x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+        )
+    x = x.reshape(x.shape[0], -1)
+    return x @ params["fc"]["w"] + params["fc"]["b"]
+
+
+init_cnn1 = partial(init_cnn, widths=(8, 16, 32))
+init_cnn2 = partial(init_cnn, widths=(6, 12, 24))
+
+
+# ---------------------------------------------------------------------------
+# ResNet (basic blocks, GN)
+# ---------------------------------------------------------------------------
+
+
+def _init_block(key, cin, cout, stride):
+    ks = jax.random.split(key, 3)
+    p = {
+        "conv1": conv_init(ks[0], 3, 3, cin, cout),
+        "gn1_s": jnp.ones((cout,)),
+        "gn1_b": jnp.zeros((cout,)),
+        "conv2": conv_init(ks[1], 3, 3, cout, cout),
+        "gn2_s": jnp.ones((cout,)),
+        "gn2_b": jnp.zeros((cout,)),
+    }
+    if stride != 1 or cin != cout:
+        p["proj"] = conv_init(ks[2], 1, 1, cin, cout)
+    return p
+
+
+def _apply_block(p, x, stride):
+    h = conv(x, p["conv1"], stride)
+    h = jax.nn.relu(group_norm(h, p["gn1_s"], p["gn1_b"]))
+    h = conv(h, p["conv2"], 1)
+    h = group_norm(h, p["gn2_s"], p["gn2_b"])
+    sc = conv(x, p["proj"], stride) if "proj" in p else x
+    return jax.nn.relu(h + sc)
+
+
+def _stage_strides(blocks_per_stage):
+    strides = []
+    for stage, n in enumerate(blocks_per_stage):
+        for b in range(n):
+            strides.append(2 if (b == 0 and stage > 0) else 1)
+    return strides
+
+
+def init_resnet(key, num_classes=10, blocks_per_stage=(1, 1, 1, 1), width=16, in_ch=3):
+    ks = jax.random.split(key, 2 + sum(blocks_per_stage))
+    params = {"stem": conv_init(ks[0], 3, 3, in_ch, width), "blocks": []}
+    cin = width
+    ki = 1
+    for stage, n in enumerate(blocks_per_stage):
+        cout = width * (2**stage)
+        for b in range(n):
+            stride = 2 if (b == 0 and stage > 0) else 1
+            params["blocks"].append(_init_block(ks[ki], cin, cout, stride))
+            cin = cout
+            ki += 1
+    params["fc"] = linear_init(ks[ki], cin, num_classes)
+    return params
+
+
+def apply_resnet(params, x, blocks_per_stage=(1, 1, 1, 1)):
+    x = jax.nn.relu(conv(x, params["stem"], 1))
+    for p, s in zip(params["blocks"], _stage_strides(blocks_per_stage)):
+        x = _apply_block(p, x, s)
+    x = x.mean(axis=(1, 2))
+    return x @ params["fc"]["w"] + params["fc"]["b"]
+
+
+init_resnet10 = partial(init_resnet, blocks_per_stage=(1, 1, 1, 1), width=16)
+init_resnet18 = partial(init_resnet, blocks_per_stage=(2, 2, 2, 2), width=16)
+apply_resnet10 = partial(apply_resnet, blocks_per_stage=(1, 1, 1, 1))
+apply_resnet18 = partial(apply_resnet, blocks_per_stage=(2, 2, 2, 2))

@@ -1,0 +1,139 @@
+"""Shared low-level layers: initializers, norms, RoPE, MLP variants, embeddings.
+
+Everything is a pure function over parameter pytrees (nested dicts of
+jnp arrays) — no framework dependency. Parameter dtype and compute dtype
+follow the ArchConfig numerics policy.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, in_dim: int, out_dim: int, dtype, scale: float | None = None):
+    """Truncated-normal fan-in init (0.02-style default used across the zoo)."""
+    if scale is None:
+        scale = in_dim**-0.5
+    w = jax.random.truncated_normal(key, -2.0, 2.0, (in_dim, out_dim), jnp.float32)
+    return (w * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype):
+    w = jax.random.truncated_normal(key, -2.0, 2.0, (vocab, dim), jnp.float32)
+    return (w * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x, scale, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dtype)
+
+
+def layernorm(x, scale, bias, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dtype)
+
+
+def init_norm(cfg, d: int):
+    if cfg.norm == "rmsnorm":
+        return {"scale": jnp.zeros((d,), jnp.float32)}
+    return {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def apply_norm(cfg, params, x):
+    if cfg.norm == "rmsnorm":
+        return rmsnorm(x, params["scale"])
+    return layernorm(x, params["scale"], params["bias"])
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_angles(positions, dim: int, theta: float):
+    """positions: (...,) int32 -> sin/cos of shape (..., dim/2)."""
+    freqs = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., dim/2)
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x, sin, cos):
+    """x: (..., S, n, dim); sin/cos: (..., S, dim/2) broadcast over heads."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    sin = sin[..., None, :]  # add head axis
+    cos = cos[..., None, :]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP variants
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, cfg, d: int, ff: int, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    if cfg.mlp_act.endswith("_glu"):
+        return {
+            "gate": dense_init(k1, d, ff, dtype),
+            "up": dense_init(k2, d, ff, dtype),
+            "down": dense_init(k3, ff, d, dtype),
+        }
+    return {"up": dense_init(k1, d, ff, dtype), "down": dense_init(k2, ff, d, dtype)}
+
+
+def apply_mlp(cfg, params, x):
+    act = cfg.mlp_act
+    if act == "silu_glu":
+        h = jax.nn.silu(x @ params["gate"]) * (x @ params["up"])
+    elif act == "gelu_glu":
+        h = jax.nn.gelu(x @ params["gate"], approximate=True) * (x @ params["up"])
+    elif act == "sq_relu":
+        h = jnp.square(jax.nn.relu(x @ params["up"]))
+    elif act == "gelu":
+        h = jax.nn.gelu(x @ params["up"], approximate=True)
+    else:
+        raise ValueError(f"unknown mlp_act {act}")
+    return h @ params["down"]
+
+
+# ---------------------------------------------------------------------------
+# vocab padding (shardability over the model axis)
+# ---------------------------------------------------------------------------
+
+
+def padded_vocab(vocab: int, multiple: int = 128) -> int:
+    """Pad the vocab so the logits axis is MXU-lane aligned and divisible by
+    the 16-way model mesh axis."""
+    return ((vocab + multiple - 1) // multiple) * multiple
+
+
+def mask_padded_logits(logits, vocab: int):
+    """Set logits of padded vocab slots to a large negative value."""
+    v_pad = logits.shape[-1]
+    if v_pad == vocab:
+        return logits
+    ids = jnp.arange(v_pad)
+    neg = jnp.asarray(jnp.finfo(jnp.float32).min / 2, logits.dtype)
+    return jnp.where(ids < vocab, logits, neg)

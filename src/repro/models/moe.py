@@ -1,0 +1,135 @@
+"""Mixture-of-Experts FFN: top-k routing with capacity, scatter-based
+dispatch (GSPMD expert-parallel friendly), shared experts, aux load-balance
+loss.
+
+Design notes (TPU adaptation):
+* Routed experts are PADDED to a multiple of the model-parallel axis
+  (qwen2-moe: 60 -> 64). Padded experts get -inf router logits, never
+  receive tokens, and are excluded from the aux loss.
+* Dispatch is scatter/gather based: tokens are ranked within their expert via
+  a cumulative sum over the (tokens*k, E) one-hot, scattered into an
+  (E, capacity, d) buffer (out-of-capacity tokens dropped via OOB scatter),
+  expert-matmul'ed with the (E, d, ff) stacks (sharded over 'model' =>
+  GSPMD inserts the all-to-alls), and gathered back with router weights.
+  This avoids the (S, E, C) dense dispatch tensor of the classic
+  MeshTF formulation, which is O(S*E*C) memory.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+def pad_experts(num_experts: int, multiple: int) -> int:
+    return ((num_experts + multiple - 1) // multiple) * multiple
+
+
+def init_moe(key, cfg, dtype, expert_pad_to: int = 1):
+    d = cfg.d_model
+    e_pad = pad_experts(cfg.num_experts, expert_pad_to)
+    ks = jax.random.split(key, 5)
+    glu = cfg.mlp_act.endswith("_glu")
+    def stack(k, din, dout):
+        kk = jax.random.split(k, e_pad)
+        return jnp.stack([dense_init(kk[i], din, dout, dtype) for i in range(e_pad)])
+
+    p = {
+        "router": dense_init(ks[0], d, e_pad, jnp.float32, scale=0.02),
+        "up": stack(ks[1], d, cfg.moe_d_ff),
+        "down": stack(ks[2], cfg.moe_d_ff, d),
+    }
+    if glu:
+        p["gate"] = stack(ks[3], d, cfg.moe_d_ff)
+    if cfg.shared_d_ff:
+        from repro.models.layers import init_mlp
+
+        p["shared"] = init_mlp(ks[4], cfg, d, cfg.shared_d_ff, dtype)
+    return p
+
+
+def _expert_act(cfg, p, xb):
+    """xb: (E, C, d) -> (E, C, d). Batched expert MLP."""
+    if cfg.mlp_act.endswith("_glu"):
+        act = jax.nn.silu if cfg.mlp_act == "silu_glu" else jax.nn.gelu
+        h = act(jnp.einsum("ecd,edf->ecf", xb, p["gate"])) * jnp.einsum(
+            "ecd,edf->ecf", xb, p["up"]
+        )
+    else:
+        h = jax.nn.relu(jnp.einsum("ecd,edf->ecf", xb, p["up"])) ** 2
+    return jnp.einsum("ecf,efd->ecd", h, p["down"])
+
+
+def moe_forward(cfg, params, x, *, capacity_factor: float | None = None,
+                constrain: bool = False):
+    """x: (B, S, d). Returns (y, aux) where aux = {"lb_loss", "router_z"}.
+
+    Top-k routing with renormalized weights (DeepSeek/Qwen style).
+    """
+    B, S, d = x.shape
+    T = B * S
+    k = cfg.moe_top_k
+    e_pad = params["router"].shape[-1]
+    e_real = cfg.num_experts
+    cf = capacity_factor if capacity_factor is not None else cfg.capacity_factor
+    cap = max(8, int(T * k * cf / e_real))
+
+    xt = x.reshape(T, d)
+    logits = (xt.astype(jnp.float32)) @ params["router"]  # (T, E_pad)
+    # mask padded experts
+    if e_pad != e_real:
+        pad_mask = jnp.arange(e_pad) < e_real
+        logits = jnp.where(pad_mask[None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, k)  # (T, k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # --- aux losses -------------------------------------------------------
+    # load-balance (Switch-style): E * sum_e f_e * P_e over real experts
+    dispatch_counts = jnp.zeros((e_pad,), jnp.float32).at[top_e.reshape(-1)].add(1.0)
+    f = dispatch_counts / (T * k)
+    pmean = probs.mean(axis=0)
+    lb_loss = e_real * jnp.sum(f[:e_real] * pmean[:e_real])
+    router_z = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+
+    # --- dispatch -----------------------------------------------------------
+    flat_e = top_e.reshape(-1)  # (T*k,) token-major, slot-minor
+    onehot = jax.nn.one_hot(flat_e, e_pad, dtype=jnp.int32)
+    rank = jnp.cumsum(onehot, axis=0) - onehot  # rank within expert
+    pos = jnp.take_along_axis(rank, flat_e[:, None], axis=1)[:, 0]  # (T*k,)
+    keep = pos < cap
+    # OOB positions are dropped by scatter mode="drop"
+    safe_pos = jnp.where(keep, pos, cap)
+    tok_idx = jnp.repeat(jnp.arange(T), k)
+
+    buf = jnp.zeros((e_pad, cap + 1, d), x.dtype)
+    buf = buf.at[flat_e, safe_pos].add(xt[tok_idx], mode="drop")
+    buf = buf[:, :cap]
+    if constrain:
+        # pin the dispatch buffer to expert-parallel layout so GSPMD emits
+        # an all-to-all (scatter -> expert shard) instead of gathering the
+        # buffer to every device (§Perf hillclimb 2)
+        from jax.sharding import PartitionSpec as P
+
+        buf = jax.lax.with_sharding_constraint(buf, P("model", None, None))
+
+    yb = _expert_act(cfg, params, buf)  # (E, cap, d)
+    if constrain:
+        from jax.sharding import PartitionSpec as P
+
+        yb = jax.lax.with_sharding_constraint(yb, P("model", None, None))
+
+    # gather back: token t slot j reads yb[flat_e, safe_pos]
+    gathered = yb.at[flat_e, safe_pos].get(mode="fill", fill_value=0)  # (T*k, d)
+    gathered = jnp.where(keep[:, None], gathered, 0)
+    w = top_w.reshape(-1)[:, None].astype(x.dtype)
+    y = jnp.zeros((T, d), x.dtype).at[tok_idx].add(gathered * w)
+
+    if cfg.shared_d_ff:
+        from repro.models.layers import apply_mlp
+
+        y = y + apply_mlp(cfg, params["shared"], xt)
+
+    aux = {"lb_loss": lb_loss, "router_z": router_z}
+    return y.reshape(B, S, d), aux

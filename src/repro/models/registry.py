@@ -1,0 +1,30 @@
+"""Registry of FL-plane models (paper Table II) by name.
+
+Each entry: name -> (init_fn(key, num_classes, image), apply_fn(params, x)).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+from repro.models.cnn import (
+    apply_cnn,
+    apply_resnet10,
+    apply_resnet18,
+    init_cnn1,
+    init_cnn2,
+    init_resnet10,
+    init_resnet18,
+)
+
+FL_MODELS = {
+    "cnn1": (lambda key, num_classes=10, image=16: init_cnn1(key, num_classes, image=image), apply_cnn),
+    "cnn2": (lambda key, num_classes=10, image=16: init_cnn2(key, num_classes, image=image), apply_cnn),
+    "resnet10": (lambda key, num_classes=10, image=16: init_resnet10(key, num_classes), apply_resnet10),
+    "resnet18": (lambda key, num_classes=10, image=16: init_resnet18(key, num_classes), apply_resnet18),
+}
+
+
+def get_fl_model(name: str):
+    if name not in FL_MODELS:
+        raise KeyError(f"unknown FL model {name!r}; known: {sorted(FL_MODELS)}")
+    return FL_MODELS[name]

@@ -1,0 +1,307 @@
+"""Attention-free sequence mixers: RWKV6 ("Finch") and Mamba2 (SSD).
+
+Both are implemented as exact recurrences via ``lax.scan`` over time — this
+is the numerics oracle and the CPU execution path. The Pallas kernel
+(`repro.kernels.rwkv6_scan`) implements the chunked TPU-native form of the
+RWKV6 recurrence; the chunked jnp form is in `rwkv6_chunked` below (used by
+the perf path and validated against the scan).
+
+Layouts: x (B, S, d). Recurrent states:
+  RWKV6:  {"tm_x": (B,d), "cm_x": (B,d), "s": (B, H, hd, hd)}
+  Mamba2: {"conv": (B, W-1, conv_dim), "s": (B, H, P, N)}
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+# ===========================================================================
+# RWKV6
+# ===========================================================================
+
+LORA_R = 32  # rank of the data-dependent mixing/decay LoRAs
+
+
+def init_rwkv6(key, cfg, dtype):
+    d = cfg.d_model
+    H, hd = cfg.ssm_heads, cfg.ssm_head_dim
+    ks = jax.random.split(key, 16)
+    p = {
+        # token-shift mixing coefficients (r, w, k, v, g + base)
+        "mu_base": jnp.zeros((d,), jnp.float32),
+        "mu": jnp.zeros((5, d), jnp.float32),
+        # data-dependent mixing LoRA: (d -> r -> 5*d)
+        "lora_A": dense_init(ks[0], d, 5 * LORA_R, dtype),
+        "lora_B": 0.0 * dense_init(ks[1], 5 * LORA_R, 5 * d, dtype),
+        # projections
+        "wr": dense_init(ks[2], d, d, dtype),
+        "wk": dense_init(ks[3], d, d, dtype),
+        "wv": dense_init(ks[4], d, d, dtype),
+        "wg": dense_init(ks[5], d, d, dtype),
+        "wo": dense_init(ks[6], d, d, dtype, scale=d**-0.5),
+        # decay: w0 + lora
+        "w0": jnp.full((d,), -6.0, jnp.float32),
+        "decay_A": dense_init(ks[7], d, LORA_R, dtype),
+        "decay_B": 0.0 * dense_init(ks[8], LORA_R, d, dtype),
+        # per-channel bonus u
+        "u": jnp.zeros((H, hd), jnp.float32),
+        # output groupnorm (per head)
+        "ln_scale": jnp.ones((d,), jnp.float32),
+        "ln_bias": jnp.zeros((d,), jnp.float32),
+        # channel-mix
+        "cm_mu_k": jnp.zeros((d,), jnp.float32),
+        "cm_mu_r": jnp.zeros((d,), jnp.float32),
+        "cm_wk": dense_init(ks[9], d, cfg.d_ff, dtype),
+        "cm_wv": dense_init(ks[10], cfg.d_ff, d, dtype),
+        "cm_wr": dense_init(ks[11], d, d, dtype),
+    }
+    return p
+
+
+def _rwkv6_inputs(p, x, x_prev):
+    """Compute r,k,v,g,w for a sequence. x: (B,S,d); x_prev: shifted x."""
+    dx = x_prev - x
+    xxx = x + dx * p["mu_base"]
+    lora = jnp.tanh(xxx @ p["lora_A"]) @ p["lora_B"]  # (B,S,5d)
+    d = x.shape[-1]
+    mix = p["mu"][None, None] + lora.reshape(*x.shape[:-1], 5, d)
+    xs = x[..., None, :] + dx[..., None, :] * mix  # (B,S,5,d)
+    x_r, x_w, x_k, x_v, x_g = [xs[..., i, :] for i in range(5)]
+    r = x_r @ p["wr"]
+    k = x_k @ p["wk"]
+    v = x_v @ p["wv"]
+    g = jax.nn.silu(x_g @ p["wg"])
+    decay = p["w0"] + jnp.tanh(x_w @ p["decay_A"]) @ p["decay_B"]
+    w = jnp.exp(-jnp.exp(decay.astype(jnp.float32)))  # (B,S,d) in (0,1)
+    return r, k, v, g, w
+
+
+def _heads(x, H, hd):
+    return x.reshape(*x.shape[:-1], H, hd)
+
+
+def _group_norm(x, scale, bias, H, eps=1e-5):
+    """Per-head groupnorm on (B,S,d)."""
+    shp = x.shape
+    xh = x.reshape(*shp[:-1], H, shp[-1] // H).astype(jnp.float32)
+    mu = xh.mean(-1, keepdims=True)
+    var = xh.var(-1, keepdims=True)
+    xh = (xh - mu) * jax.lax.rsqrt(var + eps)
+    return (xh.reshape(shp) * scale + bias).astype(x.dtype)
+
+
+def rwkv6_time_mix(cfg, p, x, state):
+    """Sequential (exact) RWKV6 time-mix. x: (B,S,d). Returns (y, new_state)."""
+    B, S, d = x.shape
+    H, hd = cfg.ssm_heads, cfg.ssm_head_dim
+    x_prev = jnp.concatenate([state["tm_x"][:, None], x[:, :-1]], axis=1)
+    r, k, v, g, w = _rwkv6_inputs(p, x, x_prev)
+    r, k, v, w = (_heads(t, H, hd) for t in (r, k, v, w))
+    u = p["u"][None]  # (1,H,hd)
+
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp  # each (B,H,hd)
+        kv = k_t[..., :, None] * v_t[..., None, :]  # (B,H,hd,hd)
+        out = jnp.einsum("bhk,bhkv->bhv", r_t, s + u[..., None] * kv)
+        s = w_t[..., :, None] * s + kv
+        return s, out
+
+    xs = tuple(
+        jnp.moveaxis(t.astype(jnp.float32), 1, 0) for t in (r, k, v, w)
+    )
+    s_new, outs = jax.lax.scan(step, state["s"], xs)
+    y = jnp.moveaxis(outs, 0, 1).reshape(B, S, d).astype(x.dtype)
+    y = _group_norm(y, p["ln_scale"], p["ln_bias"], H)
+    y = ((y * g.astype(y.dtype)) @ p["wo"].astype(y.dtype)).astype(x.dtype)
+    return y, {"tm_x": x[:, -1].astype(state["tm_x"].dtype), "s": s_new}
+
+
+def rwkv6_time_mix_chunked(cfg, p, x, state, chunk: int = 64):
+    """Chunk-parallel form of the same recurrence (TPU-native; matmul heavy).
+
+    Within a chunk of length L:
+      decay_prod[t] = prod_{i<=t} w_i          (cumulative decay)
+      y_t = r_t . (D_t * S_0) + sum_{j<=t} r_t.(prod_{j<i<=t} w_i ... ) k_j v_j
+    Implemented with cumulative-log-decay matmuls (flash-linear-attention
+    style). Numerically validated against rwkv6_time_mix in the tests.
+    """
+    B, S, d = x.shape
+    H, hd = cfg.ssm_heads, cfg.ssm_head_dim
+    assert S % chunk == 0
+    x_prev = jnp.concatenate([state["tm_x"][:, None], x[:, :-1]], axis=1)
+    r, k, v, g, w = _rwkv6_inputs(p, x, x_prev)
+    r, k, v, w = (_heads(t, H, hd).astype(jnp.float32) for t in (r, k, v, w))
+    u = p["u"][None]
+    nC = S // chunk
+    def reshape_c(t):
+        return t.reshape(B, nC, chunk, H, hd)
+    r, k, v, w = (reshape_c(t) for t in (r, k, v, w))
+    logw = jnp.log(jnp.maximum(w, 1e-38))
+    cum = jnp.cumsum(logw, axis=2)  # within-chunk cumulative log decay
+
+    def body(s, inp):
+        r_c, k_c, v_c, cum_c, logw_c = inp
+        total = cum_c[:, -1]  # (B,H,hd) total log-decay of the chunk
+        # decay from chunk start to just before t: cum_{t-1} = cum_t - logw_t
+        dec_to_t = jnp.exp(cum_c - logw_c)  # (B,chunk,H,hd)
+        # inter-chunk: y_state[t] = r_t * decay(start..t-1) . S
+        r_dec = r_c * dec_to_t
+        y_state = jnp.einsum("bthk,bhkv->bthv", r_dec, s)
+        # intra-chunk: pairwise decay matrix  A[t,j] = exp(cum_{t-1} - cum_j), j < t
+        # scores s[t,j] = sum_k r_t[k] k_j[k] exp(cum_{t-1}[k] - cum_j[k])
+        q_ = r_c * jnp.exp(cum_c - logw_c)
+        k_ = k_c * jnp.exp(-cum_c)
+        att = jnp.einsum("bthk,bjhk->bhtj", q_, k_)
+        tj = jnp.tril(jnp.ones((chunk, chunk)), -1)
+        att = att * tj[None, None]
+        # bonus diagonal: u * k_t
+        diag = jnp.einsum("bthk,bthk->bth", r_c, u[:, None] * k_c)
+        y_intra = jnp.einsum("bhtj,bjhv->bthv", att, v_c)
+        y_intra = y_intra + diag[..., None] * v_c
+        # state update: S' = exp(total) * S + sum_j exp(total - cum_j) k_j v_j
+        k_dec = k_c * jnp.exp(total[:, None] - cum_c)
+        s = jnp.exp(total)[..., None] * s + jnp.einsum(
+            "bjhk,bjhv->bhkv", k_dec, v_c
+        )
+        return s, y_state + y_intra
+
+    xs = tuple(
+        jnp.moveaxis(t, 1, 0) for t in (r, k, v, cum, logw)
+    )
+    s_new, ys = jax.lax.scan(body, state["s"].astype(jnp.float32), xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, d).astype(x.dtype)
+    y = _group_norm(y, p["ln_scale"], p["ln_bias"], H)
+    y = ((y * g.astype(y.dtype)) @ p["wo"].astype(y.dtype)).astype(x.dtype)
+    return y, {"tm_x": x[:, -1].astype(state["tm_x"].dtype), "s": s_new}
+
+
+def rwkv6_channel_mix(cfg, p, x, state):
+    x_prev = jnp.concatenate([state["cm_x"][:, None], x[:, :-1]], axis=1)
+    dx = x_prev - x
+    x_k = x + dx * p["cm_mu_k"]
+    x_r = x + dx * p["cm_mu_r"]
+    k = jnp.square(jax.nn.relu(x_k @ p["cm_wk"].astype(x_k.dtype)))
+    kv = k @ p["cm_wv"].astype(k.dtype)
+    y = (jax.nn.sigmoid(x_r @ p["cm_wr"].astype(x_r.dtype)) * kv).astype(x.dtype)
+    return y, {"cm_x": x[:, -1].astype(state["cm_x"].dtype)}
+
+
+def init_rwkv6_state(cfg, batch: int, dtype=jnp.float32):
+    H, hd = cfg.ssm_heads, cfg.ssm_head_dim
+    return {
+        "tm_x": jnp.zeros((batch, cfg.d_model), dtype),
+        "cm_x": jnp.zeros((batch, cfg.d_model), dtype),
+        "s": jnp.zeros((batch, H, hd, hd), jnp.float32),
+    }
+
+
+# ===========================================================================
+# Mamba2 (SSD)
+# ===========================================================================
+
+
+def init_mamba2(key, cfg, dtype):
+    """Projections are kept SEPARATE (wz/wx/wB/wC/wdt rather than one fused
+    in_proj) so each output axis can be sharded cleanly over the tensor-
+    parallel mesh axis without cutting across component boundaries —
+    a TP-friendly decomposition of the reference fused layout."""
+    d, din = cfg.d_model, cfg.d_inner
+    H, N = cfg.ssm_heads, cfg.ssm_state
+    P = cfg.ssm_head_dim
+    assert H * P == din, (H, P, din)
+    ks = jax.random.split(key, 8)
+    return {
+        "wz": dense_init(ks[0], d, din, dtype),
+        "wx": dense_init(ks[1], d, din, dtype),
+        "wB": dense_init(ks[2], d, N, dtype),
+        "wC": dense_init(ks[3], d, N, dtype),
+        "wdt": dense_init(ks[4], d, H, dtype),
+        "conv_x": 0.1 * jax.random.normal(ks[5], (cfg.conv_width, din), jnp.float32).astype(dtype),
+        "conv_b_x": jnp.zeros((din,), jnp.float32),
+        "conv_BC": 0.1 * jax.random.normal(ks[6], (cfg.conv_width, 2 * N), jnp.float32).astype(dtype),
+        "conv_b_BC": jnp.zeros((2 * N,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "norm_scale": jnp.zeros((din,), jnp.float32),
+        "out_proj": dense_init(ks[7], din, d, dtype, scale=din**-0.5),
+    }
+
+
+def _causal_conv(w, b, u, conv_state):
+    """Causal depthwise conv1d, width W. u: (B,S,C). conv_state: (B,W-1,C)."""
+    W = w.shape[0]
+    full = jnp.concatenate([conv_state.astype(u.dtype), u], axis=1)
+    S = u.shape[1]
+    ys = 0.0
+    for wi in range(W):
+        ys = ys + full[:, wi : wi + S] * w[wi]
+    y = jax.nn.silu(ys + b.astype(u.dtype))
+    new_state = full[:, -(W - 1) :] if W > 1 else conv_state
+    return y, new_state
+
+
+def mamba2_block(cfg, p, x, state):
+    """Exact sequential Mamba2 (SSD recurrence). x: (B,S,d)."""
+    B, S, d = x.shape
+    din, H, N = cfg.d_inner, cfg.ssm_heads, cfg.ssm_state
+    P = cfg.ssm_head_dim
+
+    z = x @ p["wz"]
+    xin = x @ p["wx"]
+    BC = jnp.concatenate([x @ p["wB"], x @ p["wC"]], axis=-1)
+    dt = x @ p["wdt"]  # (B,S,H)
+
+    xin, conv_x_state = _causal_conv(p["conv_x"], p["conv_b_x"], xin, state["conv_x"])
+    BC, conv_bc_state = _causal_conv(p["conv_BC"], p["conv_b_BC"], BC, state["conv_BC"])
+    Bc = BC[..., :N].astype(jnp.float32)
+    Cc = BC[..., N:].astype(jnp.float32)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(p["A_log"])  # (H,) negative
+    a = jnp.exp(dt * A)  # (B,S,H) decay in (0,1)
+
+    xh = xin.reshape(B, S, H, P).astype(jnp.float32)
+
+    def step(s, inp):
+        a_t, dtx_t, B_t, C_t, x_t = inp
+        # s: (B,H,P,N)
+        s = a_t[..., None, None] * s + (dtx_t[..., None] * x_t)[..., None] * B_t[:, None, None, :]
+        y = jnp.einsum("bhpn,bn->bhp", s, C_t)
+        return s, y
+
+    xs = (
+        jnp.moveaxis(a, 1, 0),
+        jnp.moveaxis(dt, 1, 0),
+        jnp.moveaxis(Bc, 1, 0),
+        jnp.moveaxis(Cc, 1, 0),
+        jnp.moveaxis(xh, 1, 0),
+    )
+    s_new, ys = jax.lax.scan(step, state["s"], xs)
+    y = jnp.moveaxis(ys, 0, 1)  # (B,S,H,P)
+    y = y + p["D"][None, None, :, None] * xh
+    y = y.reshape(B, S, din).astype(x.dtype)
+    # gated RMSNorm (mamba2 style)
+    y = y * jax.nn.silu(z)
+    from repro.models.layers import rmsnorm
+
+    y = rmsnorm(y, p["norm_scale"])
+    y = y @ p["out_proj"]
+    new_state = {
+        "conv_x": conv_x_state.astype(state["conv_x"].dtype),
+        "conv_BC": conv_bc_state.astype(state["conv_BC"].dtype),
+        "s": s_new,
+    }
+    return y, new_state
+
+
+def init_mamba2_state(cfg, batch: int, dtype=jnp.float32):
+    H, N, P = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim
+    return {
+        "conv_x": jnp.zeros((batch, cfg.conv_width - 1, cfg.d_inner), dtype),
+        "conv_BC": jnp.zeros((batch, cfg.conv_width - 1, 2 * N), dtype),
+        "s": jnp.zeros((batch, H, P, N), jnp.float32),
+    }

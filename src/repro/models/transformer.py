@@ -1,0 +1,575 @@
+"""Composable transformer assembly for every assigned architecture.
+
+An ``ArchConfig`` describes the model as ``head_blocks + pattern*n_repeats +
+tail_blocks`` (see configs.base.BlockKind). The repeated pattern unit is
+*scanned* over its repeats (stacked parameters) so the lowered HLO stays
+small for 27–81-layer models; head/tail/shared blocks live outside the scan.
+
+Entry points:
+  init_params(key, cfg, opts)        -> param pytree
+  forward(cfg, opts, params, ...)    -> train loss / prefill / decode
+  init_cache(cfg, opts, B, S, dtype) -> decode cache pytree
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as A
+from repro.models import moe as M
+from repro.models import ssm as S
+from repro.models.layers import (
+    apply_mlp,
+    apply_norm,
+    embed_init,
+    init_mlp,
+    init_norm,
+    mask_padded_logits,
+    padded_vocab,
+)
+
+
+@dataclass(frozen=True)
+class ModelOpts:
+    """Build/runtime options orthogonal to the architecture definition."""
+
+    kv_mult: int = 1  # KV-head replication for tensor parallelism
+    attn_chunk: int = 0  # online-softmax KV chunk (0 = single-block attention)
+    rwkv_chunk: int = 0  # chunk-parallel RWKV6 (0 = exact scan)
+    remat: bool = True  # activation checkpointing around the scanned unit
+    expert_pad_to: int = 1  # pad routed experts to a multiple of this
+    window_cache: bool = False  # ring-buffer window-sized cache for local_attn
+    loss_chunk: int = 512  # sequence chunk for the LM loss (avoids (B,S,V))
+    use_kernels: bool = False  # route hot ops through repro.kernels.ops
+    act_spec: Any = None  # PartitionSpec for the residual stream (seq parallel)
+    unroll_scan: bool = False  # python-loop the unit (FLOP-counting dry-runs)
+    ssm_seq_chunk: int = 0  # chunked-remat SSM time scan (0 = one full scan)
+    moe_constrain: bool = False  # explicit expert sharding on MoE dispatch buffers
+
+
+# ---------------------------------------------------------------------------
+# per-block init / apply
+# ---------------------------------------------------------------------------
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def init_block(key, cfg, kind: str, opts: ModelOpts, *, cross: bool = False):
+    dt = _dtype(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    p: dict[str, Any] = {}
+    if kind in ("attn", "local_attn", "shared_attn"):
+        p["ln1"] = init_norm(cfg, d)
+        p["attn"] = A.init_attn(ks[0], cfg, dt, opts.kv_mult)
+        p["ln2"] = init_norm(cfg, d)
+        p["mlp"] = init_mlp(ks[1], cfg, d, cfg.d_ff, dt)
+    elif kind == "mla":
+        p["ln1"] = init_norm(cfg, d)
+        p["mla"] = A.init_mla(ks[0], cfg, dt)
+        p["ln2"] = init_norm(cfg, d)
+        p["mlp"] = init_mlp(ks[1], cfg, d, cfg.dense_d_ff or cfg.d_ff, dt)
+    elif kind == "moe":
+        p["ln1"] = init_norm(cfg, d)
+        p["attn"] = A.init_attn(ks[0], cfg, dt, opts.kv_mult)
+        p["ln2"] = init_norm(cfg, d)
+        p["moe"] = M.init_moe(ks[1], cfg, dt, opts.expert_pad_to)
+    elif kind == "mla_moe":
+        p["ln1"] = init_norm(cfg, d)
+        p["mla"] = A.init_mla(ks[0], cfg, dt)
+        p["ln2"] = init_norm(cfg, d)
+        p["moe"] = M.init_moe(ks[1], cfg, dt, opts.expert_pad_to)
+    elif kind == "rwkv6":
+        p["ln1"] = init_norm(cfg, d)
+        p["rwkv"] = S.init_rwkv6(ks[0], cfg, dt)
+        p["ln2"] = init_norm(cfg, d)
+    elif kind == "mamba2":
+        p["ln1"] = init_norm(cfg, d)
+        p["mamba"] = S.init_mamba2(ks[0], cfg, dt)
+    else:
+        raise ValueError(kind)
+    if cross:
+        p["ln_x"] = init_norm(cfg, d)
+        p["xattn"] = A.init_cross_attn(ks[4], cfg, dt)
+    return p
+
+
+def init_block_state(cfg, kind: str, opts: ModelOpts, batch: int, seq: int, dtype):
+    """Decode-time state for one block occurrence."""
+    if kind in ("attn", "shared_attn", "moe"):
+        return A.init_kv_cache(cfg, batch, seq, dtype, opts.kv_mult)
+    if kind == "local_attn":
+        s = min(seq, cfg.sliding_window) if opts.window_cache else seq
+        return A.init_kv_cache(cfg, batch, s, dtype, opts.kv_mult)
+    if kind in ("mla", "mla_moe"):
+        return A.init_mla_cache(cfg, batch, seq, dtype)
+    if kind == "rwkv6":
+        return S.init_rwkv6_state(cfg, batch)
+    if kind == "mamba2":
+        return S.init_mamba2_state(cfg, batch)
+    raise ValueError(kind)
+
+
+def apply_block(
+    cfg,
+    opts: ModelOpts,
+    kind: str,
+    p,
+    x,
+    *,
+    positions,
+    state=None,
+    cache_pos=None,
+    enc_out=None,
+):
+    """Returns (x, new_state, aux). state is None in train mode."""
+    aux = {"lb_loss": jnp.zeros((), jnp.float32), "router_z": jnp.zeros((), jnp.float32)}
+    decode = state is not None and cache_pos is not None
+
+    def attn_part(p, x, window, theta):
+        h = apply_norm(cfg, p["ln1"], x)
+        y, new_kv = A.attn_forward(
+            cfg, p["attn"], h,
+            positions=positions,
+            theta=theta,
+            window=window,
+            cache=state if decode else None,
+            cache_pos=cache_pos,
+            chunk=opts.attn_chunk,
+            kv_mult=opts.kv_mult,
+        )
+        return x + y, new_kv
+
+    if kind in ("attn", "shared_attn", "moe"):
+        x, new_state = attn_part(p, x, 0, cfg.rope_theta)
+    elif kind == "local_attn":
+        theta = cfg.local_rope_theta or cfg.rope_theta
+        x, new_state = attn_part(p, x, cfg.sliding_window, theta)
+    elif kind in ("mla", "mla_moe"):
+        h = apply_norm(cfg, p["ln1"], x)
+        y, new_state = A.mla_forward(
+            cfg, p["mla"], h,
+            positions=positions,
+            theta=cfg.rope_theta,
+            cache=state if decode else None,
+            cache_pos=cache_pos,
+            chunk=opts.attn_chunk,
+        )
+        x = x + y
+    elif kind in ("rwkv6", "mamba2"):
+        st0 = state if state is not None else (
+            S.init_rwkv6_state(cfg, x.shape[0]) if kind == "rwkv6"
+            else S.init_mamba2_state(cfg, x.shape[0])
+        )
+
+        def block1(xc, st):
+            if kind == "rwkv6":
+                h = apply_norm(cfg, p["ln1"], xc)
+                y, st_tm = (
+                    S.rwkv6_time_mix_chunked(cfg, p["rwkv"], h, st, opts.rwkv_chunk)
+                    if opts.rwkv_chunk
+                    and xc.shape[1] % max(opts.rwkv_chunk, 1) == 0
+                    and xc.shape[1] > 1
+                    else S.rwkv6_time_mix(cfg, p["rwkv"], h, st)
+                )
+                xc = xc + y
+                h = apply_norm(cfg, p["ln2"], xc)
+                y, st_cm = S.rwkv6_channel_mix(cfg, p["rwkv"], h, st)
+                return xc + y, {**st, **st_tm, **st_cm}
+            h = apply_norm(cfg, p["ln1"], xc)
+            y, st2 = S.mamba2_block(cfg, p["mamba"], h, st)
+            return xc + y, st2
+
+        C = opts.ssm_seq_chunk
+        B_, Sx, d_ = x.shape
+        if C and Sx > C and Sx % C == 0 and state is None:
+            # chunked-remat time scan: only chunk-boundary states are saved
+            # for the backward pass (the §Perf memory lever for SSM training)
+            xs = jnp.moveaxis(x.reshape(B_, Sx // C, C, d_), 1, 0)
+
+            def body(st, xc):
+                xo, st2 = block1(xc, st)
+                return st2, xo
+
+            _, ys = jax.lax.scan(jax.checkpoint(body), st0, xs)
+            x = jnp.moveaxis(ys, 0, 1).reshape(B_, Sx, d_)
+            new_state = None
+        else:
+            x, ns = block1(x, st0)
+            new_state = ns if state is not None else None
+        return x, new_state, aux
+    else:
+        raise ValueError(kind)
+
+    # cross attention (whisper decoder)
+    if enc_out is not None and "xattn" in p:
+        h = apply_norm(cfg, p["ln_x"], x)
+        x = x + A.cross_attn_forward(cfg, p["xattn"], h, enc_out)
+
+    # FFN half
+    h = apply_norm(cfg, p["ln2"], x)
+    if kind in ("moe", "mla_moe"):
+        y, aux = M.moe_forward(cfg, p["moe"], h, constrain=opts.moe_constrain)
+    else:
+        y = apply_mlp(cfg, p["mlp"], h)
+    x = x + y
+    return x, new_state if (decode or new_state is not None) else None, aux
+
+
+# ---------------------------------------------------------------------------
+# whole-model init
+# ---------------------------------------------------------------------------
+
+
+def init_params(key, cfg, opts: ModelOpts):
+    dt = _dtype(cfg)
+    V = padded_vocab(cfg.vocab_size)
+    ks = jax.random.split(key, 10)
+    cross = cfg.enc_dec
+    params: dict[str, Any] = {
+        "embed": embed_init(ks[0], V, cfg.d_model, dt),
+        "final_norm": init_norm(cfg, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["out"] = embed_init(ks[1], V, cfg.d_model, dt)  # (V, d), used transposed
+    if cfg.learned_pos_emb:
+        params["pos_embed"] = embed_init(ks[2], cfg.max_seq_len, cfg.d_model, dt)
+
+    # head / tail blocks
+    hb = []
+    for i, blk in enumerate(cfg.head_blocks):
+        hb.append(init_block(jax.random.fold_in(ks[3], i), cfg, blk.kind, opts, cross=cross))
+    params["head_blocks"] = hb
+    tb = []
+    for i, blk in enumerate(cfg.tail_blocks):
+        tb.append(init_block(jax.random.fold_in(ks[4], i), cfg, blk.kind, opts, cross=cross))
+    params["tail_blocks"] = tb
+
+    # shared blocks: one copy per distinct shared kind
+    shared = {}
+    for blk in cfg.pattern:
+        if blk.shared and blk.kind not in shared:
+            shared[blk.kind] = init_block(
+                jax.random.fold_in(ks[5], hash(blk.kind) % 2**31), cfg, blk.kind, opts,
+                cross=cross,
+            )
+    params["shared"] = shared
+
+    # scanned unit: stacked params for non-shared pattern positions
+    if cfg.n_repeats:
+        def one_repeat(key_r):
+            unit = {}
+            for i, blk in enumerate(cfg.pattern):
+                if blk.shared:
+                    continue
+                unit[f"blk{i}"] = init_block(
+                    jax.random.fold_in(key_r, i), cfg, blk.kind, opts, cross=cross
+                )
+            return unit
+
+        rep_keys = jax.random.split(ks[6], cfg.n_repeats)
+        reps = [one_repeat(rep_keys[r]) for r in range(cfg.n_repeats)]
+        params["unit"] = jax.tree.map(lambda *xs: jnp.stack(xs), *reps)
+    else:
+        params["unit"] = {}
+
+    # encoder (whisper)
+    if cfg.enc_dec:
+        enc_keys = jax.random.split(ks[7], cfg.enc_layers)
+        enc = [
+            init_block(enc_keys[i], cfg, "attn", opts, cross=False)
+            for i in range(cfg.enc_layers)
+        ]
+        params["encoder"] = jax.tree.map(lambda *xs: jnp.stack(xs), *enc)
+        params["enc_pos"] = embed_init(ks[8], cfg.enc_seq_len, cfg.d_model, dt)
+        params["enc_norm"] = init_norm(cfg, cfg.d_model)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# encoder (bidirectional, whisper)
+# ---------------------------------------------------------------------------
+
+
+def _encode(cfg, opts, params, frames):
+    """frames: (B, Se, d) stubbed conv/mel output."""
+    x = frames + params["enc_pos"][None, : frames.shape[1]].astype(frames.dtype)
+    positions = jnp.arange(frames.shape[1])
+
+    def body(x, layer_p):
+        h = apply_norm(cfg, layer_p["ln1"], x)
+        n, hd = cfg.num_heads, cfg.head_dim
+        q = (h @ layer_p["attn"]["wq"]).reshape(*h.shape[:-1], n, hd)
+        k = (h @ layer_p["attn"]["wk"]).reshape(*h.shape[:-1], -1, hd)
+        v = (h @ layer_p["attn"]["wv"]).reshape(*h.shape[:-1], -1, hd)
+        o = A.mha(q, k, v, q_positions=positions, k_positions=positions, causal=False)
+        x = x + o.reshape(*h.shape[:-1], n * hd) @ layer_p["attn"]["wo"]
+        h = apply_norm(cfg, layer_p["ln2"], x)
+        x = x + apply_mlp(cfg, layer_p["mlp"], h)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return apply_norm(cfg, params["enc_norm"], x)
+
+
+# ---------------------------------------------------------------------------
+# backbone
+# ---------------------------------------------------------------------------
+
+
+def _backbone(cfg, opts, params, x, *, positions, states=None, cache_pos=None, enc_out=None):
+    """Run head blocks, the scanned unit, and tail blocks.
+
+    states: None (train) or a dict {"head": [..], "unit": stacked, "tail": [..]}
+    Returns (x, new_states, aux_sum).
+    """
+    aux_sum = {"lb_loss": jnp.zeros((), jnp.float32), "router_z": jnp.zeros((), jnp.float32)}
+    new_states: dict[str, Any] = {"head": [], "unit": None, "tail": []}
+
+    def _acc(a, b):
+        return {k: a[k] + b[k] for k in a}
+
+    for i, blk in enumerate(cfg.head_blocks):
+        st = states["head"][i] if states else None
+        x, ns, aux = apply_block(
+            cfg, opts, blk.kind, params["head_blocks"][i], x,
+            positions=positions, state=st, cache_pos=cache_pos, enc_out=enc_out,
+        )
+        new_states["head"].append(ns)
+        aux_sum = _acc(aux_sum, aux)
+
+    if cfg.n_repeats:
+        shared_p = params["shared"]
+
+        def _constrain(x):
+            if opts.act_spec is not None and x.shape[1] > 1:
+                return jax.lax.with_sharding_constraint(x, opts.act_spec)
+            return x
+
+        def unit_body(carry, xs):
+            x, aux_c = carry
+            unit_p, unit_st = xs
+            x = _constrain(x)
+            new_st = {}
+            for i, blk in enumerate(cfg.pattern):
+                p_i = shared_p[blk.kind] if blk.shared else unit_p[f"blk{i}"]
+                st_i = unit_st[f"blk{i}"] if unit_st is not None else None
+                x, ns_i, aux_i = apply_block(
+                    cfg, opts, blk.kind, p_i, x,
+                    positions=positions, state=st_i, cache_pos=cache_pos,
+                    enc_out=enc_out,
+                )
+                new_st[f"blk{i}"] = ns_i
+                aux_c = _acc(aux_c, aux_i)
+            x = _constrain(x)
+            if unit_st is None:
+                new_st = None
+            return (x, aux_c), new_st
+
+        body = jax.checkpoint(unit_body) if opts.remat else unit_body
+        unit_states = states["unit"] if states else None
+        if opts.unroll_scan:
+            # python-unrolled (small-repeat counting configs): every layer's
+            # FLOPs/collectives appear explicitly in the lowered HLO.
+            new_unit_states = {f"blk{i}": [] for i in range(len(cfg.pattern))} if unit_states is not None else None
+            for r in range(cfg.n_repeats):
+                unit_p = jax.tree.map(lambda t: t[r], params["unit"])
+                st_r = (
+                    jax.tree.map(lambda t: t[r], unit_states)
+                    if unit_states is not None else None
+                )
+                (x, aux_sum), ns = body((x, aux_sum), (unit_p, st_r))
+                if unit_states is not None:
+                    for k in ns:
+                        new_unit_states[k].append(ns[k])
+            if unit_states is not None:
+                new_states["unit"] = jax.tree.map(
+                    lambda *xs: jnp.stack(xs), *[
+                        {k: v[r] for k, v in new_unit_states.items()}
+                        for r in range(cfg.n_repeats)
+                    ]
+                )
+        elif unit_states is None:
+            # scan requires concrete xs pytrees; use params only and close over None
+            def body2(carry, unit_p):
+                return body(carry, (unit_p, None))
+
+            (x, aux_sum), _ = jax.lax.scan(body2, (x, aux_sum), params["unit"])
+        else:
+            xs = (params["unit"], unit_states)
+            (x, aux_sum), new_unit_states = jax.lax.scan(body, (x, aux_sum), xs)
+            new_states["unit"] = new_unit_states
+
+    for i, blk in enumerate(cfg.tail_blocks):
+        st = states["tail"][i] if states else None
+        x, ns, aux = apply_block(
+            cfg, opts, blk.kind, params["tail_blocks"][i], x,
+            positions=positions, state=st, cache_pos=cache_pos, enc_out=enc_out,
+        )
+        new_states["tail"].append(ns)
+        aux_sum = _acc(aux_sum, aux)
+
+    x = apply_norm(cfg, params["final_norm"], x)
+    return x, (new_states if states else None), aux_sum
+
+
+def _logits_matrix(cfg, params):
+    w = params["embed"] if cfg.tie_embeddings else params["out"]
+    return w  # (V_pad, d); logits = h @ w.T
+
+
+def _embed_tokens(cfg, params, tokens, *, offset=0):
+    x = params["embed"][tokens]
+    if cfg.learned_pos_emb:
+        pe = jax.lax.dynamic_slice_in_dim(params["pos_embed"], offset, tokens.shape[1], 0)
+        x = x + pe[None].astype(x.dtype)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+
+def lm_loss_chunked(cfg, opts, h, w_vocab, labels):
+    """Next-token CE without materializing (B, S, V). h: (B,S,d) hidden states
+    (already shifted alignment: predict labels[t] from h[t])."""
+    B, Sq, d = h.shape
+    chunk = min(opts.loss_chunk, Sq)
+    while Sq % chunk:
+        chunk -= 1
+    n = Sq // chunk
+    hc = h.reshape(B, n, chunk, d)
+    lc = labels.reshape(B, n, chunk)
+
+    if opts.use_kernels:
+        from repro.kernels import ops as K
+
+        def body(carry, xs):
+            h_i, l_i = xs
+            logits = h_i @ w_vocab.T.astype(h_i.dtype)
+            logits = mask_padded_logits(logits, cfg.vocab_size)
+            loss = K.fused_softmax_xent(logits.reshape(-1, logits.shape[-1]),
+                                        l_i.reshape(-1))
+            return carry + loss.sum(), None
+    else:
+        def body(carry, xs):
+            h_i, l_i = xs
+            logits = (h_i @ w_vocab.T.astype(h_i.dtype)).astype(jnp.float32)
+            logits = mask_padded_logits(logits, cfg.vocab_size)
+            logz = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, l_i[..., None], axis=-1)[..., 0]
+            return carry + (logz - gold).sum(), None
+
+    total, _ = jax.lax.scan(
+        body, jnp.zeros((), jnp.float32),
+        (jnp.moveaxis(hc, 1, 0), jnp.moveaxis(lc, 1, 0)),
+    )
+    return total / (B * Sq)
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+
+
+def forward_train(cfg, opts, params, batch):
+    """batch: tokens (B,S_text) int32, labels (B,S_text) int32, optional
+    media (B,M,d) [vlm], frames (B,Se,d) [audio]. Returns scalar loss + aux."""
+    tokens = batch["tokens"]
+    x = _embed_tokens(cfg, params, tokens)
+    enc_out = None
+    if cfg.frontend == "vision_stub" and "media" in batch:
+        x = jnp.concatenate([batch["media"].astype(x.dtype), x], axis=1)
+    if cfg.enc_dec:
+        enc_out = _encode(cfg, opts, params, batch["frames"])
+    Sfull = x.shape[1]
+    positions = jnp.arange(Sfull)
+    h, _, aux = _backbone(cfg, opts, params, x, positions=positions, enc_out=enc_out)
+    # only text positions carry labels (media prefix has none)
+    h_text = h[:, Sfull - tokens.shape[1] :]
+    w = _logits_matrix(cfg, params)
+    loss = lm_loss_chunked(cfg, opts, h_text, w, batch["labels"])
+    total = loss + cfg.router_aux_weight * (aux["lb_loss"] + 0.1 * aux["router_z"])
+    return total, {"ce": loss, **aux}
+
+
+def forward_prefill(cfg, opts, params, batch):
+    """Full-sequence forward returning last-position logits (sampling seed).
+    Cache construction is exercised via decode; prefill here measures the
+    compute-bound full forward (the paper-shape 'prefill_32k')."""
+    tokens = batch["tokens"]
+    x = _embed_tokens(cfg, params, tokens)
+    enc_out = None
+    if cfg.frontend == "vision_stub" and "media" in batch:
+        x = jnp.concatenate([batch["media"].astype(x.dtype), x], axis=1)
+    if cfg.enc_dec:
+        enc_out = _encode(cfg, opts, params, batch["frames"])
+    positions = jnp.arange(x.shape[1])
+    h, _, _ = _backbone(cfg, opts, params, x, positions=positions, enc_out=enc_out)
+    w = _logits_matrix(cfg, params)
+    logits = h[:, -1] @ w.T.astype(h.dtype)
+    return mask_padded_logits(logits, cfg.vocab_size)
+
+
+def forward_decode(cfg, opts, params, batch, states):
+    """One-token decode against a full cache.
+
+    batch: token (B,1) int32, pos () int32 — write/attend position.
+    states: pytree from init_cache (possibly prefilled).
+    Returns (logits (B,V), new_states).
+    """
+    token, pos = batch["token"], batch["pos"]
+    x = _embed_tokens(cfg, params, token, offset=0)
+    if cfg.learned_pos_emb:
+        # re-embed with dynamic position
+        x = params["embed"][token]
+        pe = jax.lax.dynamic_slice_in_dim(params["pos_embed"], pos, 1, 0)
+        x = x + pe[None].astype(x.dtype)
+    enc_out = states.get("enc_out") if isinstance(states, dict) else None
+    positions = pos[None] if pos.ndim == 0 else pos
+    blk_states = {k: v for k, v in states.items() if k != "enc_out"}
+    h, new_states, _ = _backbone(
+        cfg, opts, params, x,
+        positions=positions, states=blk_states, cache_pos=pos, enc_out=enc_out,
+    )
+    w = _logits_matrix(cfg, params)
+    logits = h[:, -1] @ w.T.astype(h.dtype)
+    if enc_out is not None:
+        new_states["enc_out"] = enc_out
+    return mask_padded_logits(logits, cfg.vocab_size), new_states
+
+
+def init_cache(cfg, opts: ModelOpts, batch: int, seq: int, dtype=jnp.bfloat16):
+    states: dict[str, Any] = {
+        "head": [
+            init_block_state(cfg, blk.kind, opts, batch, seq, dtype)
+            for blk in cfg.head_blocks
+        ],
+        "tail": [
+            init_block_state(cfg, blk.kind, opts, batch, seq, dtype)
+            for blk in cfg.tail_blocks
+        ],
+    }
+    if cfg.n_repeats:
+        def one(blk):
+            st = init_block_state(cfg, blk.kind, opts, batch, seq, dtype)
+            return jax.tree.map(
+                lambda x: jnp.broadcast_to(x[None], (cfg.n_repeats,) + x.shape), st
+            )
+
+        states["unit"] = {
+            f"blk{i}": one(blk) for i, blk in enumerate(cfg.pattern)
+        }
+    else:
+        states["unit"] = None
+    if cfg.enc_dec:
+        states["enc_out"] = jnp.zeros((batch, cfg.enc_seq_len, cfg.d_model), dtype)
+    return states

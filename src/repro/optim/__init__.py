@@ -1,0 +1,9 @@
+"""Optimizers (pure-JAX pytree transforms; no optax dependency)."""
+from repro.optim.optimizers import (  # noqa: F401
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    sgd_init,
+    sgd_update,
+)
+from repro.optim.schedule import cosine_schedule, linear_warmup_cosine  # noqa: F401

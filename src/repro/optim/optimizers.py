@@ -1,0 +1,106 @@
+"""SGD(+momentum) and AdamW as pure pytree transforms.
+
+API:
+  state = <opt>_init(params)
+  new_params, new_state = <opt>_update(grads, state, params, lr=..., ...)
+
+AdamW keeps fp32 first/second moments regardless of parameter dtype
+(mixed-precision discipline); parameters are updated in their own dtype.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), gn
+
+
+# ---------------------------------------------------------------------------
+# SGD with momentum
+# ---------------------------------------------------------------------------
+
+
+def sgd_init(params, momentum: bool = True):
+    if not momentum:
+        return {"step": jnp.zeros((), jnp.int32)}
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params),
+    }
+
+
+def sgd_update(grads, state, params, *, lr, momentum: float = 0.9, nesterov: bool = False):
+    if "m" not in state:
+        new_params = jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32) - lr * g.astype(jnp.float32)).astype(p.dtype),
+            params, grads,
+        )
+        return new_params, {"step": state["step"] + 1}
+    m = jax.tree.map(
+        lambda mm, g: momentum * mm + g.astype(jnp.float32), state["m"], grads
+    )
+    if nesterov:
+        upd = jax.tree.map(lambda mm, g: momentum * mm + g.astype(jnp.float32), m, grads)
+    else:
+        upd = m
+    new_params = jax.tree.map(
+        lambda p, u: (p.astype(jnp.float32) - lr * u).astype(p.dtype), params, upd
+    )
+    return new_params, {"step": state["step"] + 1, "m": m}
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+    }
+
+
+def adamw_update(
+    grads,
+    state,
+    params,
+    *,
+    lr,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+):
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - b1**t
+    bc2 = 1.0 - b2**t
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m / bc1
+        vhat = v / bc2
+        delta = mhat / (jnp.sqrt(vhat) + eps)
+        wd = weight_decay if p.ndim >= 2 else 0.0  # no decay on norms/biases
+        newp = p.astype(jnp.float32) - lr * (delta + wd * p.astype(jnp.float32))
+        return newp.astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_params, {"step": step, "m": new_m, "v": new_v}

@@ -1,0 +1,7 @@
+from repro.sharding.specs import (  # noqa: F401
+    batch_specs,
+    cache_specs,
+    data_axes,
+    param_specs,
+    zero1_specs,
+)

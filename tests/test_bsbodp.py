@@ -1,0 +1,81 @@
+"""BSBODP loss functions (Eq. 3/5) and protocol classification (Def. 1/2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bsbodp
+from repro.core.protocols import (
+    BSBODP_SKR,
+    PARAM_AVG,
+    PARTIAL_TRAIN,
+    aggregate_params,
+    is_submodel,
+    same_structure,
+)
+
+
+def test_kl_zero_when_equal():
+    p = jax.nn.softmax(jnp.asarray([[1.0, 2.0, 3.0]]), -1)
+    assert bsbodp.kl_div(p, p) < 1e-7
+
+
+def test_non_leaf_loss_reduces_to_ce_when_beta0():
+    key = jax.random.PRNGKey(0)
+    z = jax.random.normal(key, (8, 10))
+    y = jax.random.randint(jax.random.fold_in(key, 1), (8,), 0, 10)
+    t = jax.nn.softmax(jax.random.normal(jax.random.fold_in(key, 2), (8, 10)), -1)
+    l0 = bsbodp.non_leaf_loss(z, y, t, beta=0.0)
+    ce = bsbodp.softmax_xent(z, y)
+    assert jnp.allclose(l0, ce, atol=1e-6)
+
+
+def test_distillation_gradient_pulls_toward_teacher():
+    """Minimizing the KL term moves student logits toward teacher probs."""
+    z = jnp.zeros((1, 4))
+    t = jnp.asarray([[0.7, 0.1, 0.1, 0.1]])
+    y = jnp.asarray([0])
+
+    def kl_only(z):
+        return bsbodp.non_leaf_loss(z, y, t, beta=1.0) - bsbodp.non_leaf_loss(
+            z, y, t, beta=0.0
+        )
+
+    g = jax.grad(lambda z: kl_only(z))(z)
+    assert g[0, 0] < 0  # increase logit of the teacher's preferred class
+
+
+def test_leaf_loss_combines():
+    key = jax.random.PRNGKey(0)
+    zl = jax.random.normal(key, (4, 10))
+    yl = jnp.zeros((4,), jnp.int32)
+    zb = jax.random.normal(jax.random.fold_in(key, 1), (4, 10))
+    yb = jnp.zeros((4,), jnp.int32)
+    t = jax.nn.softmax(jax.random.normal(jax.random.fold_in(key, 2), (4, 10)), -1)
+    full = bsbodp.leaf_loss(zl, yl, zb, yb, t, beta=1.5, gamma=1.0)
+    local = bsbodp.softmax_xent(zl, yl)
+    non_leaf = bsbodp.non_leaf_loss(zb, yb, t, beta=1.5)
+    assert jnp.allclose(full, local + non_leaf, atol=1e-6)
+
+
+# --- protocols ----------------------------------------------------------------
+
+
+def test_protocol_kinds():
+    a = {"w": np.zeros((4, 4))}
+    b = {"w": np.zeros((8, 8))}
+    assert same_structure(a, a) and not same_structure(a, b)
+    assert is_submodel(a, b) and not is_submodel(b, a)
+    # Theorem 1: equivalence protocols always allow migration
+    assert BSBODP_SKR.allows_migration(lambda v: a if v == "x" else b, "x", "y")
+    assert PARAM_AVG.allows_migration(lambda v: a, "x", "y")
+    # Theorem 2: partial order can forbid it
+    assert not PARTIAL_TRAIN.allows_migration(
+        lambda v: b if v == "x" else a, "x", "y"
+    )
+
+
+def test_aggregate_params_weighted():
+    a = {"w": jnp.ones((2, 2))}
+    b = {"w": 3 * jnp.ones((2, 2))}
+    out = aggregate_params([a, b], [1.0, 3.0])
+    assert jnp.allclose(out["w"], 2.5)

@@ -1,0 +1,100 @@
+"""Config registry: all 10 assigned architectures, exact dims, param bands."""
+import pytest
+
+from repro.configs import INPUT_SHAPES, get_arch, list_archs, reduced, with_long_variant
+
+ASSIGNED = {
+    "llava-next-mistral-7b": dict(family="vlm", num_layers=32, d_model=4096,
+                                  num_heads=32, num_kv_heads=8, d_ff=14336,
+                                  vocab_size=32000),
+    "deepseek-v2-lite-16b": dict(family="moe", num_layers=27, d_model=2048,
+                                 num_heads=16, d_ff=1408, vocab_size=102400,
+                                 kv_lora_rank=512, moe_top_k=6),
+    "rwkv6-1.6b": dict(family="ssm", num_layers=24, d_model=2048, d_ff=7168,
+                       vocab_size=65536),
+    "gemma3-12b": dict(family="dense", num_layers=48, d_model=3840,
+                       num_heads=16, num_kv_heads=8, d_ff=15360,
+                       vocab_size=262144),
+    "llama3.2-3b": dict(family="dense", num_layers=28, d_model=3072,
+                        num_heads=24, num_kv_heads=8, d_ff=8192,
+                        vocab_size=128256),
+    "nemotron-4-15b": dict(family="dense", num_layers=32, d_model=6144,
+                           num_heads=48, num_kv_heads=8, d_ff=24576,
+                           vocab_size=256000, mlp_act="sq_relu"),
+    "llama3-8b": dict(family="dense", num_layers=32, d_model=4096,
+                      num_heads=32, num_kv_heads=8, d_ff=14336,
+                      vocab_size=128256),
+    "zamba2-7b": dict(family="hybrid", num_layers=81, d_model=3584,
+                      num_heads=32, num_kv_heads=32, d_ff=14336,
+                      vocab_size=32000, ssm_state=64),
+    "qwen2-moe-a2.7b": dict(family="moe", num_layers=24, d_model=2048,
+                            num_heads=16, num_kv_heads=16, d_ff=1408,
+                            vocab_size=151936, num_experts=60, moe_top_k=4,
+                            num_shared_experts=4),
+    "whisper-small": dict(family="audio", num_layers=12, d_model=768,
+                          num_heads=12, num_kv_heads=12, d_ff=3072,
+                          vocab_size=51865, enc_dec=True, enc_layers=12),
+}
+
+PARAM_BANDS = {  # billions (total): generous ±35% bands around target size
+    "llava-next-mistral-7b": (5.0, 9.5),
+    "deepseek-v2-lite-16b": (11.0, 21.0),
+    "rwkv6-1.6b": (1.1, 2.2),
+    "gemma3-12b": (8.0, 16.0),
+    "llama3.2-3b": (2.2, 4.3),
+    "nemotron-4-15b": (10.5, 20.0),
+    "llama3-8b": (5.6, 10.5),
+    "zamba2-7b": (4.5, 10.5),
+    "whisper-small": (0.05, 0.3),
+}
+
+
+def test_all_assigned_archs_registered():
+    assert set(ASSIGNED) <= set(list_archs())
+    assert len(list_archs()) >= 10
+
+
+@pytest.mark.parametrize("name", sorted(ASSIGNED))
+def test_exact_dims(name):
+    cfg = get_arch(name)
+    for field, expect in ASSIGNED[name].items():
+        assert getattr(cfg, field) == expect, (name, field)
+    cfg.sanity()
+
+
+@pytest.mark.parametrize("name", sorted(PARAM_BANDS))
+def test_param_count_band(name):
+    lo, hi = PARAM_BANDS[name]
+    p = get_arch(name).param_count() / 1e9
+    assert lo <= p <= hi, (name, p)
+
+
+def test_moe_active_params():
+    q = get_arch("qwen2-moe-a2.7b")
+    assert q.active_param_count() < 0.35 * q.param_count()
+    d = get_arch("deepseek-v2-lite-16b")
+    assert d.active_param_count() < 0.35 * d.param_count()
+
+
+@pytest.mark.parametrize("name", sorted(ASSIGNED))
+def test_reduced_variant(name):
+    r = reduced(get_arch(name))
+    assert r.d_model <= 512 and r.num_experts <= 4
+    assert len(r.pattern) * r.n_repeats + len(r.tail_blocks) + len(r.head_blocks) == r.num_layers
+
+
+def test_input_shapes_assigned():
+    assert INPUT_SHAPES["train_4k"].seq_len == 4096
+    assert INPUT_SHAPES["train_4k"].global_batch == 256
+    assert INPUT_SHAPES["prefill_32k"].seq_len == 32768
+    assert INPUT_SHAPES["prefill_32k"].global_batch == 32
+    assert INPUT_SHAPES["decode_32k"].global_batch == 128
+    assert INPUT_SHAPES["long_500k"].seq_len == 524288
+    assert INPUT_SHAPES["long_500k"].global_batch == 1
+
+
+def test_long_variant():
+    sw = with_long_variant(get_arch("llama3-8b"))
+    assert sw.sliding_window > 0
+    assert all(b.kind == "local_attn" for b in sw.pattern)
+    assert sw.long_context == "native"

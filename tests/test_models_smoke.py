@@ -1,0 +1,138 @@
+"""Per-architecture smoke tests (assignment requirement): a REDUCED variant
+of each family runs one forward/train step on CPU — output shapes + no NaNs.
+Also one decode step against a cache, and gradients are finite."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_arch, list_archs, reduced
+from repro.models import (
+    ModelOpts,
+    forward_decode,
+    forward_prefill,
+    forward_train,
+    init_cache,
+    init_params,
+)
+
+OPTS = ModelOpts(remat=False)
+
+
+def make_batch(cfg, key, B=2, S=16):
+    batch = {
+        "tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+        "labels": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+    }
+    if cfg.frontend == "vision_stub":
+        batch["media"] = jax.random.normal(
+            key, (B, cfg.num_media_tokens, cfg.d_model), jnp.float32
+        )
+    if cfg.enc_dec:
+        batch["frames"] = jax.random.normal(
+            key, (B, cfg.enc_seq_len, cfg.d_model), jnp.float32
+        )
+    return batch
+
+
+@pytest.mark.parametrize("name", list_archs())
+def test_train_step_smoke(name):
+    cfg = reduced(get_arch(name))
+    key = jax.random.PRNGKey(0)
+    params = init_params(key, cfg, OPTS)
+    batch = make_batch(cfg, key)
+    loss, aux = forward_train(cfg, OPTS, params, batch)
+    assert loss.shape == ()
+    assert jnp.isfinite(loss), name
+    # one grad step finite
+    g = jax.grad(lambda p: forward_train(cfg, OPTS, p, batch)[0])(params)
+    assert all(jnp.isfinite(x).all() for x in jax.tree.leaves(g)), name
+
+
+@pytest.mark.parametrize("name", list_archs())
+def test_decode_step_smoke(name):
+    cfg = reduced(get_arch(name))
+    key = jax.random.PRNGKey(0)
+    params = init_params(key, cfg, OPTS)
+    B = 2
+    cache = init_cache(cfg, OPTS, B, 32, jnp.float32)
+    logits, new_cache = forward_decode(
+        cfg, OPTS, params,
+        {"token": jnp.ones((B, 1), jnp.int32), "pos": jnp.asarray(3)},
+        cache,
+    )
+    assert logits.shape[0] == B and logits.shape[1] >= cfg.vocab_size
+    assert jnp.isfinite(logits).all(), name
+    assert jax.tree.structure(cache) == jax.tree.structure(new_cache)
+
+
+@pytest.mark.parametrize("name", ["llama3-8b", "rwkv6-1.6b", "zamba2-7b"])
+def test_prefill_smoke(name):
+    cfg = reduced(get_arch(name))
+    key = jax.random.PRNGKey(0)
+    params = init_params(key, cfg, OPTS)
+    logits = forward_prefill(cfg, OPTS, params, make_batch(cfg, key))
+    assert jnp.isfinite(logits).all()
+
+
+def test_decode_matches_prefill_llama():
+    """Autoregressive consistency: decoding token-by-token reproduces the
+    full-sequence forward logits at the last position."""
+    cfg = reduced(get_arch("llama3-8b"))
+    key = jax.random.PRNGKey(1)
+    params = init_params(key, cfg, ModelOpts(remat=False))
+    B, S = 1, 8
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    full = forward_prefill(cfg, OPTS, params, {"tokens": toks})
+    cache = init_cache(cfg, OPTS, B, S + 1, jnp.float32)
+    for t in range(S):
+        logits, cache = forward_decode(
+            cfg, OPTS, params,
+            {"token": toks[:, t : t + 1], "pos": jnp.asarray(t)}, cache,
+        )
+    assert jnp.allclose(full, logits, atol=2e-3), float(jnp.max(jnp.abs(full - logits)))
+
+
+def test_decode_matches_prefill_rwkv():
+    cfg = reduced(get_arch("rwkv6-1.6b"))
+    key = jax.random.PRNGKey(2)
+    params = init_params(key, cfg, OPTS)
+    B, S = 1, 8
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    full = forward_prefill(cfg, OPTS, params, {"tokens": toks})
+    cache = init_cache(cfg, OPTS, B, S + 1, jnp.float32)
+    for t in range(S):
+        logits, cache = forward_decode(
+            cfg, OPTS, params,
+            {"token": toks[:, t : t + 1], "pos": jnp.asarray(t)}, cache,
+        )
+    assert jnp.allclose(full, logits, atol=2e-3), float(jnp.max(jnp.abs(full - logits)))
+
+
+def test_chunked_attention_matches_full():
+    cfg = reduced(get_arch("llama3-8b"))
+    key = jax.random.PRNGKey(0)
+    params = init_params(key, cfg, OPTS)
+    batch = make_batch(cfg, key, B=2, S=32)
+    l1, _ = forward_train(cfg, ModelOpts(remat=False, attn_chunk=0), params, batch)
+    l2, _ = forward_train(cfg, ModelOpts(remat=False, attn_chunk=8), params, batch)
+    assert jnp.allclose(l1, l2, atol=1e-4), (float(l1), float(l2))
+
+
+def test_rwkv_chunked_matches_scan():
+    cfg = reduced(get_arch("rwkv6-1.6b"))
+    key = jax.random.PRNGKey(0)
+    params = init_params(key, cfg, OPTS)
+    batch = make_batch(cfg, key, B=2, S=32)
+    l1, _ = forward_train(cfg, ModelOpts(remat=False, rwkv_chunk=0), params, batch)
+    l2, _ = forward_train(cfg, ModelOpts(remat=False, rwkv_chunk=8), params, batch)
+    assert jnp.allclose(l1, l2, atol=1e-3), (float(l1), float(l2))
+
+
+def test_fused_kernel_loss_matches_ref():
+    cfg = reduced(get_arch("llama3.2-3b"))
+    key = jax.random.PRNGKey(0)
+    params = init_params(key, cfg, OPTS)
+    batch = make_batch(cfg, key, B=2, S=16)
+    l1, _ = forward_train(cfg, ModelOpts(remat=False, use_kernels=False), params, batch)
+    l2, _ = forward_train(cfg, ModelOpts(remat=False, use_kernels=True), params, batch)
+    assert jnp.allclose(l1, l2, atol=1e-4), (float(l1), float(l2))

@@ -1,0 +1,125 @@
+"""Hypothesis property-based tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bsbodp import kl_div, non_leaf_loss, softmax_xent
+from repro.core.protocols import aggregate_params
+from repro.core.skr import queue_means, rectify_given_qbar, skr_init, skr_process_batch
+from repro.data.partition import dirichlet_partition
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@st.composite
+def prob_batches(draw):
+    n = draw(st.integers(1, 12))
+    c = draw(st.integers(2, 20))
+    seed = draw(st.integers(0, 2**31 - 1))
+    key = jax.random.PRNGKey(seed)
+    logits = jax.random.normal(key, (n, c)) * draw(st.floats(0.1, 5.0))
+    probs = jax.nn.softmax(logits, -1)
+    labels = jax.random.randint(jax.random.fold_in(key, 1), (n,), 0, c)
+    return probs, labels, c, seed
+
+
+@given(prob_batches())
+@settings(**SETTINGS)
+def test_skr_output_is_distribution(batch):
+    """Rectified knowledge is always a valid probability distribution
+    (Eq. 18/19) regardless of queue contents."""
+    probs, labels, c, seed = batch
+    key = jax.random.PRNGKey(seed + 1)
+    st_ = skr_init(c, 5)
+    st_ = {
+        "q": jax.random.uniform(key, (c, 5), minval=0.05, maxval=0.95),
+        "count": jax.random.randint(jax.random.fold_in(key, 2), (c,), 0, 6).clip(0, 5),
+        "head": st_["head"],
+    }
+    _, q = skr_process_batch(st_, probs, labels)
+    assert bool(jnp.all(q >= -1e-6))
+    assert bool(jnp.all(jnp.abs(q.sum(-1) - 1.0) < 1e-4))
+
+
+@given(prob_batches())
+@settings(**SETTINGS)
+def test_skr_preserves_nonlabel_ratios(batch):
+    """Eq. 31's KL projection preserves relative ratios of non-label
+    classes (the paper's 'similarity integrity' claim)."""
+    probs, labels, c, seed = batch
+    qbar = jnp.full((c,), 0.5)
+    counts = jnp.ones((c,), jnp.int32)
+    out = rectify_given_qbar(probs, labels, qbar, counts)
+    for i in range(probs.shape[0]):
+        lbl = int(labels[i])
+        others = [j for j in range(c) if j != lbl]
+        a, b = others[0], others[-1]
+        if probs[i, b] > 1e-4 and out[i, b] > 1e-6:
+            r_in = probs[i, a] / probs[i, b]
+            r_out = out[i, a] / out[i, b]
+            assert bool(jnp.abs(r_in - r_out) < 1e-3 * (1 + r_in))
+
+
+@given(prob_batches())
+@settings(**SETTINGS)
+def test_skr_queue_counts_monotone(batch):
+    probs, labels, c, seed = batch
+    st0 = skr_init(c, 5)
+    st1, _ = skr_process_batch(st0, probs, labels)
+    assert bool(jnp.all(st1["count"] >= st0["count"]))
+    assert bool(jnp.all(st1["count"] <= 5))
+    # per-class counts equal correct attributions, saturating at queue_len
+    correct = np.asarray(jnp.argmax(probs, 1) == labels)
+    per_class = np.bincount(np.asarray(labels)[correct], minlength=c)
+    assert np.array_equal(np.asarray(st1["count"]), np.minimum(per_class, 5))
+
+
+@given(st.integers(2, 8), st.integers(20, 200),
+       st.floats(0.1, 10.0), st.integers(0, 1000))
+@settings(**SETTINGS)
+def test_dirichlet_partition_exact_cover(k, n, alpha, seed):
+    labels = np.random.default_rng(seed).integers(0, 10, n)
+    parts = dirichlet_partition(labels, k, alpha, seed=seed)
+    cat = np.sort(np.concatenate(parts))
+    assert np.array_equal(cat, np.arange(n))
+
+
+@given(st.integers(1, 6), st.integers(0, 100))
+@settings(**SETTINGS)
+def test_aggregate_params_convexity(n, seed):
+    """Weighted parameter average stays within the leaf-wise min/max
+    envelope (Eq. 2 is a convex combination)."""
+    rng = np.random.default_rng(seed)
+    trees = [{"w": jnp.asarray(rng.normal(0, 1, (3, 3)), jnp.float32)} for _ in range(n)]
+    weights = [float(rng.uniform(0.1, 5.0)) for _ in range(n)]
+    out = aggregate_params(trees, weights)
+    stack = jnp.stack([t["w"] for t in trees])
+    assert bool(jnp.all(out["w"] <= stack.max(0) + 1e-5))
+    assert bool(jnp.all(out["w"] >= stack.min(0) - 1e-5))
+
+
+@given(st.integers(2, 16), st.integers(2, 30), st.integers(0, 500),
+       st.floats(0.0, 4.0))
+@settings(**SETTINGS)
+def test_distill_loss_nonneg_and_beta_monotone_at_optimum(n, c, seed, beta):
+    """CE and KL are nonnegative; loss with beta > 0 >= loss with beta = 0
+    for the same logits (the KL term is nonnegative)."""
+    key = jax.random.PRNGKey(seed)
+    z = jax.random.normal(key, (n, c)) * 2
+    y = jax.random.randint(jax.random.fold_in(key, 1), (n,), 0, c)
+    t = jax.nn.softmax(jax.random.normal(jax.random.fold_in(key, 2), (n, c)), -1)
+    l0 = non_leaf_loss(z, y, t, beta=0.0)
+    lb = non_leaf_loss(z, y, t, beta=beta)
+    assert float(l0) >= -1e-6
+    assert float(lb) >= float(l0) - 1e-5
+
+
+@given(st.integers(0, 100))
+@settings(**SETTINGS)
+def test_kl_nonnegative(seed):
+    key = jax.random.PRNGKey(seed)
+    p = jax.nn.softmax(jax.random.normal(key, (4, 9)), -1)
+    q = jax.nn.softmax(jax.random.normal(jax.random.fold_in(key, 1), (4, 9)), -1)
+    assert float(kl_div(p, q)) >= -1e-6
+    assert float(kl_div(p, p)) < 1e-6

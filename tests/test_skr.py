@@ -1,0 +1,101 @@
+"""SKR unit tests: Eq. 8 misattribution test, Eq. 15 MLE, Eq. 31 projection,
+queue semantics of Algorithm 2."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.skr import (
+    queue_means,
+    rectify_given_qbar,
+    skr_init,
+    skr_process_batch,
+    skr_transmit,
+)
+
+
+def test_well_attributed_passthrough_and_push():
+    st = skr_init(4, queue_len=3)
+    probs = jnp.asarray([[0.7, 0.1, 0.1, 0.1]])
+    labels = jnp.asarray([0])
+    st2, q = skr_process_batch(st, probs, labels)
+    assert jnp.allclose(q, probs)  # correct -> transmit P unchanged
+    assert st2["count"][0] == 1
+    assert st2["q"][0, 0] == 0.7
+
+
+def test_misattributed_empty_queue_passthrough():
+    st = skr_init(4, queue_len=3)
+    probs = jnp.asarray([[0.1, 0.7, 0.1, 0.1]])  # label 0, argmax 1
+    st2, q = skr_process_batch(st, probs, jnp.asarray([0]))
+    assert jnp.allclose(q, probs)  # no history -> transmit P
+    assert st2["count"][0] == 0  # wrong prediction -> no push
+
+
+def test_rectification_eq31():
+    st = skr_init(3, queue_len=2)
+    # seed queue for class 0 with [0.8, 0.6] -> qbar = 0.7
+    st = {
+        "q": st["q"].at[0, 0].set(0.8).at[0, 1].set(0.6),
+        "count": st["count"].at[0].set(2),
+        "head": st["head"],
+    }
+    p = jnp.asarray([[0.2, 0.5, 0.3]])  # label 0 misattributed
+    _, q = skr_process_batch(st, p, jnp.asarray([0]))
+    qbar = 0.7
+    assert jnp.allclose(q[0, 0], qbar, atol=1e-6)  # Eq. 15
+    # Eq. 31: non-label classes scaled by (1-qbar)/(1-p_c)
+    scale = (1 - qbar) / (1 - 0.2)
+    assert jnp.allclose(q[0, 1], 0.5 * scale, atol=1e-6)
+    assert jnp.allclose(q[0, 2], 0.3 * scale, atol=1e-6)
+    assert jnp.allclose(q.sum(), 1.0, atol=1e-6)  # Eq. 18
+    # relative relationships preserved (the KL-projection property)
+    assert jnp.allclose(q[0, 1] / q[0, 2], 0.5 / 0.3, atol=1e-5)
+
+
+def test_queue_circular_eviction():
+    st = skr_init(2, queue_len=2)
+    for pc in (0.5, 0.6, 0.9):  # three pushes into a length-2 queue
+        probs = jnp.asarray([[pc, 1 - pc]])
+        st, _ = skr_process_batch(st, probs, jnp.asarray([0]))
+    assert st["count"][0] == 2
+    # oldest (0.5) evicted: queue holds {0.9, 0.6}
+    got = sorted(np.asarray(st["q"][0]).tolist())
+    assert np.allclose(got, [0.6, 0.9], atol=1e-6)
+    assert jnp.allclose(queue_means(st)[0], 0.75)
+
+
+def test_sequential_semantics_within_batch():
+    """Algorithm 2 is per-sample sequential: a correct sample's push is
+    visible to a later misattributed sample of the same class."""
+    st = skr_init(2, queue_len=4)
+    probs = jnp.asarray([[0.9, 0.1], [0.3, 0.7]])  # both label 0
+    labels = jnp.asarray([0, 0])
+    _, q = skr_process_batch(st, probs, labels)
+    assert jnp.allclose(q[0], probs[0])
+    assert jnp.allclose(q[1, 0], 0.9)  # rectified using the fresh push
+
+
+def test_batched_rectify_matches_sequential_when_no_pushes():
+    """rectify_given_qbar == scan path when the batch contains no correct
+    samples (no queue mutations)."""
+    key = jax.random.PRNGKey(0)
+    N, C = 32, 7
+    probs = jax.nn.softmax(jax.random.normal(key, (N, C)), -1)
+    # force misattribution: label = argmin
+    labels = jnp.argmin(probs, axis=1)
+    st = skr_init(C, queue_len=4)
+    st = {
+        "q": jnp.ones_like(st["q"]) * 0.5,
+        "count": jnp.full_like(st["count"], 2),
+        "head": st["head"],
+    }
+    _, q_seq = skr_process_batch(st, probs, labels)
+    q_bat = rectify_given_qbar(probs, labels, queue_means(st), st["count"])
+    assert jnp.allclose(q_seq, q_bat, atol=1e-6)
+
+
+def test_skr_transmit_temperature():
+    st = skr_init(3, 4)
+    logits = jnp.asarray([[2.0, 1.0, 0.0]])
+    _, q = skr_transmit(st, logits, jnp.asarray([0]), temperature=0.5)
+    assert jnp.allclose(q, jax.nn.softmax(logits / 0.5, -1), atol=1e-6)

@@ -1,0 +1,128 @@
+"""Data pipeline, optimizers, checkpointing, sharding spec rules."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import load_pytree, save_pytree
+from repro.data.partition import dirichlet_partition, iid_partition
+from repro.data.synthetic import make_dataset
+from repro.optim import adamw_init, adamw_update, clip_by_global_norm, sgd_init, sgd_update
+
+
+def test_dataset_shapes_and_determinism():
+    a = make_dataset("synth_cifar10", num_train=64, num_test=32, image=16, seed=3)
+    b = make_dataset("synth_cifar10", num_train=64, num_test=32, image=16, seed=3)
+    assert a.x_train.shape == (64, 16, 16, 3)
+    assert np.allclose(a.x_train, b.x_train)
+    assert a.x_train.min() >= 0 and a.x_train.max() <= 1
+    c = make_dataset("synth_svhn", num_train=64, num_test=32, image=16, seed=3)
+    assert not np.allclose(a.x_train, c.x_train)
+
+
+def test_dataset_learnable_and_difficulty_ordered():
+    """Class signal exists and difficulty matches svhn < cifar < cinic."""
+    from repro.data.synthetic import DATASET_PARAMS
+
+    assert (DATASET_PARAMS["synth_svhn"]["noise"]
+            < DATASET_PARAMS["synth_cifar10"]["noise"]
+            < DATASET_PARAMS["synth_cinic10"]["noise"])
+
+
+def test_dirichlet_partition_properties():
+    labels = np.random.default_rng(0).integers(0, 10, 500)
+    parts = dirichlet_partition(labels, 10, alpha=2.0, seed=1)
+    all_idx = np.concatenate(parts)
+    assert len(all_idx) == 500
+    assert len(np.unique(all_idx)) == 500  # exact cover, no duplicates
+    assert all(len(p) >= 2 for p in parts)
+    # lower alpha -> more skew
+    skew = lambda ps: np.std([np.bincount(labels[p], minlength=10) for p in ps])
+    p_low = dirichlet_partition(labels, 10, alpha=0.1, seed=1)
+    assert skew(p_low) > skew(parts)
+
+
+def test_iid_partition():
+    parts = iid_partition(100, 7)
+    assert sum(len(p) for p in parts) == 100
+
+
+def test_adamw_minimizes_quadratic():
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    state = adamw_init(params)
+    for _ in range(200):
+        g = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(params)
+        params, state = adamw_update(g, state, params, lr=0.1, weight_decay=0.0)
+    assert jnp.abs(params["w"]).max() < 0.05
+
+
+def test_sgd_momentum_minimizes():
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    state = sgd_init(params)
+    for _ in range(100):
+        g = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(params)
+        params, state = sgd_update(g, state, params, lr=0.05)
+    assert jnp.abs(params["w"]).max() < 0.05
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.asarray([3.0, 4.0])}
+    clipped, gn = clip_by_global_norm(g, 1.0)
+    assert jnp.allclose(gn, 5.0)
+    assert jnp.allclose(jnp.linalg.norm(clipped["a"]), 1.0, atol=1e-5)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {
+        "a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+        "b": {"c": jnp.ones((4,), jnp.bfloat16), "d": [jnp.zeros((2,)), jnp.ones((1,), jnp.int32)]},
+    }
+    path = os.path.join(tmp_path, "ckpt.msgpack")
+    save_pytree(path, tree)
+    back = load_pytree(path)
+    assert jnp.allclose(back["a"], tree["a"])
+    assert back["b"]["c"].dtype == jnp.bfloat16
+    assert jnp.allclose(back["b"]["c"].astype(jnp.float32), 1.0)
+    assert isinstance(back["b"]["d"], list) and len(back["b"]["d"]) == 2
+
+
+# --- sharding rules -----------------------------------------------------------
+
+
+def test_param_specs_divisibility():
+    """Every sharded axis divides the mesh axis — for every arch, on an
+    abstract 16x16 mesh (no real devices needed)."""
+    from jax.sharding import AbstractMesh, PartitionSpec as P
+
+    from repro.configs import get_arch, list_archs
+    from repro.launch.steps import default_opts, param_shapes
+    from repro.sharding import param_specs, zero1_specs
+
+    mesh = AbstractMesh((16, 16), ("data", "model"))
+
+    class M:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+
+    for name in list_archs():
+        cfg = get_arch(name)
+        opts = default_opts(cfg, M())
+        ps = param_shapes(cfg, opts)
+        specs = param_specs(cfg, opts, ps, M())
+        leaves_s = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+        leaves_p = jax.tree.leaves(ps)
+        assert len(leaves_s) == len(leaves_p)
+        for spec, leaf in zip(leaves_s, leaves_p):
+            for dim, ax in enumerate(spec):
+                if ax is None:
+                    continue
+                size = 16 if not isinstance(ax, tuple) else int(np.prod([16 for _ in ax]))
+                assert leaf.shape[dim] % size == 0, (name, spec, leaf.shape)
+        zspecs = zero1_specs(specs, ps, M())
+        for spec, leaf in zip(
+            jax.tree.leaves(zspecs, is_leaf=lambda x: isinstance(x, P)), leaves_p
+        ):
+            seen = [a for a in spec if a is not None]
+            assert len(seen) == len(set(seen))  # no axis used twice

@@ -1,0 +1,45 @@
+"""EEC-NET tree topology + dynamic migration."""
+import pytest
+
+from repro.core.topology import Tree
+
+
+def test_three_tier():
+    t = Tree.three_tier(3, 9)
+    t.validate()
+    assert t.num_tiers == 3
+    assert len(t.leaves) == 9
+    assert len(t.tier_nodes(2)) == 3
+    assert t.tier_nodes(1) == ["cloud"]
+    assert sorted(t.leaf_set("cloud")) == sorted(t.leaves)
+    assert len(t.leaf_set("edge0")) == 3
+
+
+def test_post_order_children_before_parents():
+    t = Tree.three_tier(2, 4)
+    order = list(t.post_order())
+    assert order[-1] == "cloud"
+    for c, p in t.parent.items():
+        assert order.index(c) < order.index(p)
+
+
+def test_migration():
+    t = Tree.three_tier(2, 4)
+    assert t.parent["client0"] == "edge0"
+    t.migrate("client0", "edge1")
+    assert t.parent["client0"] == "edge1"
+    assert "client0" in t.children["edge1"]
+    assert "client0" not in t.children["edge0"]
+    t.validate()
+
+
+def test_migration_cycle_rejected():
+    t = Tree.three_tier(2, 4)
+    with pytest.raises(AssertionError):
+        t.migrate("edge0", "client0")  # client0 is edge0's descendant
+
+
+def test_root_cannot_migrate():
+    t = Tree.three_tier(2, 4)
+    with pytest.raises(AssertionError):
+        t.migrate("cloud", "edge0")
