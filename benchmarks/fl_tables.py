@@ -44,6 +44,11 @@ def run_cached(key: str, alg: str, cfg: FLConfig, rounds: int, **kw):
         "comm_bytes": res.comm_bytes,
         "wall_s": round(time.time() - t0, 1),
     }
+    if res.scenario:
+        rec["scenario"] = res.scenario
+        rec["sim_wall_s"] = round(res.sim_wall_s, 1)
+        rec["sim_times"] = res.sim_times
+        rec["event_counts"] = res.event_counts
     cache = _load_cache()
     cache[key] = rec
     _save_cache(cache)
@@ -166,3 +171,27 @@ def _round_to(curve, thresh):
         if a >= thresh:
             return i + 1
     return -1
+
+
+def table_scenarios(quick=False):
+    """Beyond-paper: FedEEC under simulated network scenarios (repro.sim).
+    Adds the scenario column — accuracy AND simulated wall-clock, plus the
+    churn survived (migrations / dropouts / skipped pairs)."""
+    from repro.sim.scenarios import list_scenarios
+
+    rounds = 3 if quick else 8
+    names = ["stable", "mobile_clients"] if quick else list_scenarios()
+    rows = []
+    for name in names:
+        key = f"scenarios/fedeec/{name}/r{rounds}"
+        rec = run_cached(key, "fedeec", _cfg(clients=6, edges=3), rounds,
+                         scenario=name)
+        ev = rec.get("event_counts", {})
+        rows.append((
+            f"scenarios,{name},fedeec",
+            rec["wall_s"] * 1e6 / rounds,
+            f"best_acc={rec['best_acc']:.4f} sim_s={rec.get('sim_wall_s', 0):.1f} "
+            f"migr={ev.get('migrate', 0)} drop={ev.get('dropout', 0)} "
+            f"skip={ev.get('pair_skip', 0)}",
+        ))
+    return rows

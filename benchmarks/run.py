@@ -40,7 +40,7 @@ def roofline_rows():
 
 
 SUITES = ("table3", "table4", "table5", "table6", "table7", "fig5",
-          "kernels", "roofline")
+          "scenarios", "kernels", "roofline")
 
 
 def main() -> None:
@@ -66,6 +66,8 @@ def main() -> None:
             all_rows += fl_tables.table7_comm(args.quick)
         if "fig5" in only:
             all_rows += fl_tables.fig5_convergence(args.quick)
+        if "scenarios" in only:
+            all_rows += fl_tables.table_scenarios(args.quick)
         if "kernels" in only:
             all_rows += kernel_bench.bench()
         if "roofline" in only:

@@ -389,3 +389,7 @@ class FLConfig:
     # autoencoder
     embed_dim: int = 32
     seed: int = 0
+
+    # network simulation (repro.sim): name of a registered scenario, or ""
+    # for the plain (round-counted, no simulated clock) execution path
+    scenario: str = ""

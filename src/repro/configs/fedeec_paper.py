@@ -40,4 +40,15 @@ PRESETS: dict[str, FLConfig] = {
     "cifar10_hetero": paper_setting(
         "synth_cifar10", 10, 2, end_model_hetero="cnn2"
     ),
+    # §IV-E migration-resilience under simulated network conditions
+    # (repro.sim scenarios; accuracy reported vs simulated wall-clock)
+    "cifar10_mobile": paper_setting(
+        "synth_cifar10", 10, 3, scenario="mobile_clients"
+    ),
+    "cifar10_flaky": paper_setting(
+        "synth_cifar10", 10, 3, scenario="flaky_edge"
+    ),
+    "cifar10_stragglers": paper_setting(
+        "synth_cifar10", 10, 3, scenario="straggler_heavy"
+    ),
 }

@@ -179,20 +179,23 @@ class FedEEC:
         pair_node = v_s if self.tree.parent.get(v_s) == v_t else v_t
         eps, labels = self.embeddings[pair_node]
         n = len(labels)
+        if n == 0:  # subtree emptied by migration — nothing to distill over
+            return
         bs = min(cfg.batch_size, n)
         dec_fn = self._decode_fn()
         teacher = self._teacher_fn(self.model_of[v_t])
-        is_leaf = self.tree.is_leaf(v_s)
+        # "leaf" = data-holding end device; an edge whose clients all
+        # migrated away is tree-leaf but must not train on client data
+        is_leaf = v_s in self.client_data
         student = self._student_fn(self.model_of[v_s], is_leaf)
         link = self.comm.link_kind(
             self.tree, v_s if self.tree.parent.get(v_s) == v_t else v_t
         )
 
         # one pass over the pair's embeddings per round (CPU-capped), or a
-        # fixed number of steps when cfg.distill_steps > 0
-        steps = cfg.distill_steps or min(
-            max(1, (n + bs - 1) // bs), cfg.max_distill_steps
-        )
+        # fixed number of steps when cfg.distill_steps > 0 — pair_steps is
+        # the single source of truth so the simulator prices what runs
+        steps = self.pair_steps(v_s, v_t)
         for _ in range(steps):
             idx = self.rng.choice(n, size=bs, replace=n < bs)
             e_b = jnp.asarray(eps[idx])
@@ -222,29 +225,76 @@ class FedEEC:
         self._bsbodp_directional(v1, v2)
         self._bsbodp_directional(v2, v1)
 
+    def pair_steps(self, v1: str, v2: str) -> int:
+        """Distill steps one direction of pair (v1, v2) runs — the single
+        formula both _bsbodp_directional and the simulator's work-item
+        pricing use."""
+        pair_node = v1 if self.tree.parent.get(v1) == v2 else v2
+        n = len(self.embeddings[pair_node][1])
+        if n == 0:
+            return 0
+        bs = min(self.cfg.batch_size, n)
+        return self.cfg.distill_steps or min(
+            max(1, (n + bs - 1) // bs), self.cfg.max_distill_steps
+        )
+
     # ------------------------------------------------------------ training
 
-    def train_round(self):
-        """Algorithm 3 FedEECTrain: post-order, each node pairs with parent."""
-        for v in self.tree.post_order():
-            if v == self.tree.root:
-                continue
-            self.bsbodp_pair(v, self.tree.parent[v])
+    def round_pairs(self) -> list[tuple[str, str]]:
+        """The round's (child, parent) work items in post-order — the unit
+        the discrete-event simulator schedules."""
+        return [
+            (v, self.tree.parent[v])
+            for v in self.tree.post_order()
+            if v != self.tree.root
+        ]
+
+    def train_round(self, pairs: list[tuple[str, str]] | None = None):
+        """Algorithm 3 FedEECTrain: post-order, each node pairs with parent.
+        ``pairs`` restricts the round to a subset (e.g. online nodes only)."""
+        for v, p in (self.round_pairs() if pairs is None else pairs):
+            self.bsbodp_pair(v, p)
 
     def migrate(self, node: str, new_parent: str):
         """Dynamic migration (§IV-E): legal for any pair under BSBODP+SKR.
-        Embeddings of the moved subtree are re-registered up both paths."""
+
+        The moved subtree's embeddings are (a) dropped from the stores on
+        the old parent→root path, (b) re-registered up the new path — and
+        the re-registration upload is charged on the CommMeter per the
+        Table VII init term ((|ε|+1) per sample per hop). Only the two
+        affected root paths are recomputed, not the whole tree.
+        """
+        old_parent = self.tree.parent[node]
         self.tree.migrate(node, new_parent)
-        # recompute interior embedding stores along affected paths
-        for v in self.tree.post_order():
-            if not self.tree.is_leaf(v):
-                es, ys = [], []
-                for c in self.tree.children[v]:
-                    e, y = self.embeddings[c]
-                    es.append(e)
-                    ys.append(y)
-                if es:
-                    self.embeddings[v] = (np.concatenate(es), np.concatenate(ys))
+        # recompute stores bottom-up along the two affected paths only
+        # interior = not a data-holding device (an edge emptied by the move
+        # is a tree-leaf but its store must still be rebuilt — to empty)
+        affected = {
+            v for v in self.tree.path_to_root(old_parent)
+            + self.tree.path_to_root(new_parent)
+            if v not in self.client_data
+        }
+        for v in sorted(affected, key=self.tree.tier, reverse=True):
+            es, ys = [], []
+            for c in self.tree.children[v]:
+                e, y = self.embeddings[c]
+                es.append(e)
+                ys.append(y)
+            if es:
+                self.embeddings[v] = (np.concatenate(es), np.concatenate(ys))
+            else:
+                self.embeddings[v] = (
+                    np.zeros((0,) + self.embeddings[node][0].shape[1:],
+                             dtype=self.embeddings[node][0].dtype),
+                    np.zeros((0,), dtype=self.embeddings[node][1].dtype),
+                )
+        # charge the subtree's (ε, y) upload on every hop of the new path
+        eps, ys_ = self.embeddings[node]
+        hop = node
+        while hop != self.tree.root:
+            link = self.comm.link_kind(self.tree, hop)
+            self.comm.record(link, eps.size + ys_.size, "migrate-embed")
+            hop = self.tree.parent[hop]
 
     def cloud_params(self):
         return self.params[self.tree.root]

@@ -7,7 +7,9 @@ and leaves (end devices / clients). Node ids are strings; tiers are
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Iterator, Optional
+from typing import Callable, Iterator, Optional
+
+MigrateHook = Callable[[str, str, str], None]  # (node, old_parent, new_parent)
 
 
 @dataclass
@@ -15,6 +17,11 @@ class Tree:
     root: str
     parent: dict[str, str] = field(default_factory=dict)  # child -> parent
     children: dict[str, list[str]] = field(default_factory=dict)
+    # data-holding end devices (tier V_T). When set, this is authoritative:
+    # an edge emptied by migration is a tree-leaf but NOT a device, and a
+    # device stays a device however deep migrations push its tier.
+    devices: set = field(default_factory=set, compare=False)
+    _migrate_hooks: list = field(default_factory=list, repr=False, compare=False)
 
     # -- construction ------------------------------------------------------
 
@@ -26,15 +33,17 @@ class Tree:
         for e in range(num_edges):
             t.add(f"edge{e}", root)
         for k in range(num_clients):
-            t.add(f"client{k}", f"edge{k % num_edges}")
+            t.add(f"client{k}", f"edge{k % num_edges}", device=True)
         return t
 
-    def add(self, node: str, parent: str) -> None:
+    def add(self, node: str, parent: str, *, device: bool = False) -> None:
         assert node not in self.parent and node != self.root, node
         assert parent == self.root or parent in self.parent, parent
         self.parent[node] = parent
         self.children.setdefault(parent, []).append(node)
         self.children.setdefault(node, [])
+        if device:
+            self.devices.add(node)
 
     # -- queries -----------------------------------------------------------
 
@@ -87,7 +96,26 @@ class Tree:
             seen.add(v)
         assert seen == set(self.nodes)
 
+    def is_device(self, v: str) -> bool:
+        """Data-holding end device. Falls back to the leaf heuristic for
+        hand-built trees that never marked devices."""
+        return v in self.devices if self.devices else self.is_leaf(v)
+
+    def path_to_root(self, v: str) -> list[str]:
+        """Nodes from ``v`` (inclusive) up to and including the root."""
+        out = [v]
+        while v != self.root:
+            v = self.parent[v]
+            out.append(v)
+        return out
+
     # -- dynamic migration (paper §IV-E) -------------------------------------
+
+    def on_migrate(self, hook: MigrateHook) -> None:
+        """Register a callback fired after every successful ``migrate`` —
+        the simulator and trainers use this to observe re-parenting they
+        did not initiate themselves (e.g. DemLearn's self-organization)."""
+        self._migrate_hooks.append(hook)
 
     def migrate(self, node: str, new_parent: str) -> None:
         """Re-parent ``node`` under ``new_parent`` (Theorem 1: always legal
@@ -101,3 +129,19 @@ class Tree:
         self.children[old].remove(node)
         self.parent[node] = new_parent
         self.children.setdefault(new_parent, []).append(node)
+        for hook in self._migrate_hooks:
+            hook(node, old, new_parent)
+
+
+def link_kind(tree: Tree, child: str) -> str:
+    """Tier class of the link from ``child`` to its parent — the single
+    rule shared by CommMeter accounting and NetworkModel pricing:
+      "end-edge"   device <-> its parent (wherever migration put it)
+      "edge-cloud" non-device <-> root (incl. an edge emptied mid-run)
+      "other"      interior links of deeper hierarchies
+    """
+    if tree.is_device(child):
+        return "end-edge"
+    if tree.parent[child] == tree.root:
+        return "edge-cloud"
+    return "other"

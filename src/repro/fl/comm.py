@@ -11,8 +11,21 @@ round per direction — exactly the complexity rows of Table VII.
 from __future__ import annotations
 
 from collections import defaultdict
+from contextlib import contextmanager
 
 BYTES_PER_FLOAT = 4
+
+
+class Span:
+    """Bytes recorded between ``span()`` enter and exit, by link kind —
+    the unit the simulator converts into transfer time."""
+
+    def __init__(self):
+        self.by_link: dict[str, float] = {}
+
+    @property
+    def total(self) -> float:
+        return sum(self.by_link.values())
 
 
 class CommMeter:
@@ -24,13 +37,25 @@ class CommMeter:
         self.bytes[link] += num_floats * BYTES_PER_FLOAT
         self.events[link] += 1
 
+    @contextmanager
+    def span(self):
+        """Context manager capturing the byte delta of a block, so callers
+        (the sim engine) can price individual work items."""
+        before = dict(self.bytes)
+        sp = Span()
+        try:
+            yield sp
+        finally:
+            sp.by_link = {
+                k: v - before.get(k, 0.0)
+                for k, v in self.bytes.items()
+                if v - before.get(k, 0.0) > 0.0
+            }
+
     def link_kind(self, tree, child: str) -> str:
-        parent = tree.parent[child]
-        if tree.is_leaf(child):
-            return "end-edge"
-        if parent == tree.root:
-            return "edge-cloud"
-        return "other"
+        from repro.core.topology import link_kind
+
+        return link_kind(tree, child)
 
     def summary(self) -> dict[str, float]:
         return dict(self.bytes)

@@ -2,10 +2,16 @@
 runs the selected algorithm for R rounds, records the cloud-model accuracy
 curve and communication bytes (the quantities behind paper Tables III-VII
 and Fig. 5).
+
+With a ``scenario`` (name or ``ScenarioConfig``), rounds run inside the
+discrete-event EEC-NET simulator (``repro.sim``): churn fires at round
+boundaries, pair work is priced by link bandwidth/latency, and the
+accuracy curve is reported against simulated wall-clock seconds.
 """
 from __future__ import annotations
 
 import time
+import warnings
 from dataclasses import dataclass, field
 
 import jax
@@ -33,10 +39,23 @@ class RunResult:
     best_acc: float = 0.0
     comm_bytes: dict[str, float] = field(default_factory=dict)
     wall_s: float = 0.0
+    # simulated-network quantities (set when a scenario drives the run)
+    scenario: str = ""
+    sim_times: list[float] = field(default_factory=list)  # seconds per eval
+    sim_wall_s: float = 0.0  # simulated length of the whole run
+    event_counts: dict[str, int] = field(default_factory=dict)
+    event_log: list[dict] = field(default_factory=list)
+    event_signature: str = ""
 
     @property
     def final_acc(self) -> float:
         return self.acc_curve[-1] if self.acc_curve else 0.0
+
+    @property
+    def sim_curve(self) -> list[tuple[float, float]]:
+        """(simulated seconds, accuracy) points — the Fig. 5 x-axis the
+        paper can't show but a network-aware repro can."""
+        return list(zip(self.sim_times, self.acc_curve))
 
 
 _AUTO_CACHE: dict = {}
@@ -105,12 +124,33 @@ def run_experiment(
     eval_every: int = 1,
     verbose: bool = False,
     migration_round: int | None = None,
+    scenario=None,
 ) -> RunResult:
+    """Run ``algorithm`` for R rounds.
+
+    ``scenario`` (a name from ``repro.sim.scenarios`` or a
+    ``ScenarioConfig``; falls back to ``cfg.scenario``) switches to the
+    event-driven simulated-network path.
+    """
     ds, tree, client_data, auto = build_problem(cfg)
     trainer = make_trainer(algorithm, cfg, tree, client_data, auto)
     rounds = rounds if rounds is not None else cfg.rounds
     res = RunResult(algorithm, cfg)
+    scenario = scenario if scenario is not None else (cfg.scenario or None)
     t0 = time.time()
+    if scenario is not None:
+        _run_simulated(trainer, scenario, cfg, ds, res, rounds,
+                       eval_every, verbose)
+    else:
+        _run_plain(trainer, algorithm, ds, res, rounds, eval_every,
+                   verbose, migration_round)
+    res.comm_bytes = trainer.comm.summary()
+    res.wall_s = time.time() - t0
+    return res
+
+
+def _run_plain(trainer, algorithm, ds, res, rounds, eval_every, verbose,
+               migration_round):
     for r in range(rounds):
         if migration_round is not None and r == migration_round and hasattr(trainer, "migrate"):
             # move one client to a different edge mid-training (§IV-E demo)
@@ -118,8 +158,14 @@ def run_experiment(
             edges = [v for v in trainer.tree.nodes
                      if not trainer.tree.is_leaf(v) and v != trainer.tree.root]
             cur = trainer.tree.parent[leaf]
-            target = next(e for e in edges if e != cur)
-            trainer.migrate(leaf, target)
+            target = next((e for e in edges if e != cur), None)
+            if target is None:
+                warnings.warn(
+                    "migration demo skipped: needs >= 2 edges "
+                    f"(topology has {len(edges)})", stacklevel=2,
+                )
+            else:
+                trainer.migrate(leaf, target)
         trainer.train_round()
         if (r + 1) % eval_every == 0 or r == rounds - 1:
             acc = accuracy(trainer.cloud_apply(), trainer.cloud_params(),
@@ -127,7 +173,31 @@ def run_experiment(
             res.acc_curve.append(acc)
             res.best_acc = max(res.best_acc, acc)
             if verbose:
-                print(f"  [{algorithm}] round {r+1:3d}  cloud acc {acc:.4f}", flush=True)
-    res.comm_bytes = trainer.comm.summary()
-    res.wall_s = time.time() - t0
-    return res
+                print(f"  [{res.algorithm}] round {r+1:3d}  cloud acc {acc:.4f}", flush=True)
+
+
+def _run_simulated(trainer, scenario, cfg, ds, res, rounds, eval_every,
+                   verbose):
+    from repro.sim.engine import SimEngine
+    from repro.sim.scenarios import get_scenario
+
+    sc = get_scenario(scenario) if isinstance(scenario, str) else scenario
+    engine = SimEngine(trainer, sc, seed=cfg.seed)
+
+    def eval_fn():
+        return accuracy(trainer.cloud_apply(), trainer.cloud_params(),
+                        ds.x_test, ds.y_test)
+
+    log = engine.run(rounds, eval_fn=eval_fn, eval_every=eval_every)
+    res.scenario = sc.name
+    for t, acc in engine.acc_points:
+        res.sim_times.append(t)
+        res.acc_curve.append(acc)
+        res.best_acc = max(res.best_acc, acc)
+        if verbose:
+            print(f"  [{res.algorithm}/{sc.name}] sim t={t:8.1f}s "
+                  f"cloud acc {acc:.4f}", flush=True)
+    res.sim_wall_s = engine.now
+    res.event_counts = log.counts()
+    res.event_log = log.entries
+    res.event_signature = log.signature()

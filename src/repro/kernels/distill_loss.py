@@ -36,6 +36,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pallas_compat import CompilerParams
+
 NEG = -1e30
 
 
@@ -140,7 +142,7 @@ def _distill_loss_fwd(
             jax.ShapeDtypeStruct((Np, 2), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((block_n,), jnp.float32) for _ in range(5)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")
         ),
         interpret=interpret,
@@ -174,7 +176,7 @@ def _distill_loss_bwd(
         ],
         out_specs=pl.BlockSpec((block_n, block_v), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((Np, Vp), logits.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")
         ),
         interpret=interpret,

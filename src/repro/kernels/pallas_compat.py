@@ -1,0 +1,12 @@
+"""Version shims for the Pallas TPU API.
+
+JAX >= 0.5 exposes ``pltpu.CompilerParams``; 0.4.x called the same
+dataclass ``TPUCompilerParams`` (same fields, including
+``dimension_semantics``). Kernels import the name from here so they
+compile against either.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams

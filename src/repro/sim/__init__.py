@@ -1,0 +1,21 @@
+"""Discrete-event EEC-NET simulator (paper §IV-E "migration-resilient"
+claims made measurable).
+
+Layers:
+  * ``events``    — deterministic event queue + structured event log.
+  * ``network``   — per-tier link latency/bandwidth models.
+  * ``churn``     — node lifecycle (dropout/rejoin), stragglers, mobility.
+  * ``scenarios`` — ``ScenarioConfig`` + named scenario registry.
+  * ``engine``    — event-driven FedEEC rounds (pair-level work items).
+  * ``runner``    — CLI: ``python -m repro.sim.runner --scenario ...``.
+"""
+from repro.sim.events import Event, EventLog, EventQueue  # noqa: F401
+from repro.sim.network import LinkSpec, NetworkModel  # noqa: F401
+from repro.sim.scenarios import (  # noqa: F401
+    SCENARIOS,
+    ScenarioConfig,
+    get_scenario,
+    list_scenarios,
+    register_scenario,
+)
+from repro.sim.engine import SimEngine  # noqa: F401

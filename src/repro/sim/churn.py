@@ -1,0 +1,140 @@
+"""Node lifecycle + mobility processes.
+
+``ChurnProcess`` owns all randomness about *who misbehaves when*: which
+leaves are stragglers (drawn once), who drops offline each round and for
+how long, and who migrates to which edge (stochastic mobility or a
+scripted ``TraceEntry`` replay). All draws come from one seeded
+``default_rng`` iterated in sorted-node order, so the full churn history
+is a deterministic function of (tree, scenario, seed).
+
+The process is round-indexed: the engine calls ``draw_round(r, now)`` at
+each round boundary and gets back a list of actions to apply/log. Offline
+windows are in simulated seconds, so a single outage can straddle several
+rounds of a fast scenario or none of a slow one.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.topology import Tree
+from repro.sim.scenarios import ScenarioConfig
+
+
+@dataclass
+class ChurnAction:
+    kind: str  # dropout | rejoin | migrate
+    node: str
+    target: str = ""  # destination edge for migrate
+    until: float = 0.0  # back-online time for dropout
+
+
+class ChurnProcess:
+    def __init__(self, tree: Tree, scenario: ScenarioConfig, seed: int = 0):
+        self.tree = tree
+        self.sc = scenario
+        self.rng = np.random.default_rng(seed)
+        self.offline_until: dict[str, float] = {}
+        # device/edge membership is fixed at construction: migration moves
+        # devices around but an edge emptied mid-run is still an edge (and
+        # still a valid migration target), not a device
+        self.devices: list[str] = sorted(
+            tree.devices or (v for v in tree.nodes if tree.is_leaf(v))
+        )
+        self.edges: list[str] = sorted(
+            v for v in tree.nodes
+            if v != tree.root and v not in self.devices
+        )
+        n_strag = int(round(scenario.straggler_frac * len(self.devices)))
+        self.stragglers: set[str] = {
+            str(v) for v in
+            self.rng.choice(self.devices, size=n_strag, replace=False)
+        } if n_strag else set()
+
+    # -- queries -----------------------------------------------------------
+
+    def is_online(self, v: str, now: float) -> bool:
+        return self.offline_until.get(v, -np.inf) <= now
+
+    def compute_factor(self, v: str) -> float:
+        return self.sc.straggler_slowdown if v in self.stragglers else 1.0
+
+    def _other_edge(self, v: str) -> str | None:
+        cur = self.tree.parent[v]
+        options = [e for e in self.edges if e != cur]
+        if not options:
+            return None
+        return options[int(self.rng.integers(len(options)))]
+
+    # -- per-round draw ----------------------------------------------------
+
+    def draw_round(self, r: int, now: float) -> list[ChurnAction]:
+        sc = self.sc
+        actions: list[ChurnAction] = []
+
+        # 1. rejoins: offline windows that expired before this round
+        for v in sorted(self.offline_until):
+            if self.offline_until[v] <= now:
+                del self.offline_until[v]
+                actions.append(ChurnAction("rejoin", v))
+
+        # 2. scripted trace for this round (deterministic, consumes no rng)
+        for e in sc.trace:
+            if e.round != r:
+                continue
+            if e.kind == "dropout":
+                until = now + e.duration_s
+                self.offline_until[e.node] = until
+                actions.append(ChurnAction("dropout", e.node, until=until))
+            elif e.kind == "migrate":
+                actions.append(ChurnAction("migrate", e.node, target=e.target))
+            elif e.kind == "rejoin":
+                self.offline_until.pop(e.node, None)
+                actions.append(ChurnAction("rejoin", e.node))
+            else:
+                raise ValueError(f"unknown trace kind {e.kind!r}")
+
+        # 3. stochastic edge outages
+        for e in self.edges:
+            if not self.is_online(e, now):
+                continue
+            if self.rng.random() < sc.edge_dropout_prob:
+                until = now + float(self.rng.uniform(*sc.dropout_s))
+                self.offline_until[e] = until
+                actions.append(ChurnAction("dropout", e, until=until))
+
+        # 4. stochastic leaf dropouts
+        for v in self.devices:
+            if not self.is_online(v, now):
+                continue
+            if self.rng.random() < sc.dropout_prob:
+                until = now + float(self.rng.uniform(*sc.dropout_s))
+                self.offline_until[v] = until
+                actions.append(ChurnAction("dropout", v, until=until))
+
+        # 5. mobility: stochastic per-leaf re-parenting
+        if sc.migration_prob > 0:
+            for v in self.devices:
+                if not self.is_online(v, now):
+                    continue
+                if self.rng.random() < sc.migration_prob:
+                    tgt = self._other_edge(v)
+                    if tgt is not None:
+                        actions.append(ChurnAction("migrate", v, target=tgt))
+
+        # 6. scripted mass migration
+        if r == sc.mass_migration_round and sc.mass_migration_frac > 0:
+            leaves = self.devices
+            k = max(1, int(round(sc.mass_migration_frac * len(leaves))))
+            moved = [str(v) for v in
+                     self.rng.choice(leaves, size=min(k, len(leaves)),
+                                     replace=False)]
+            for v in sorted(moved):
+                if not self.is_online(v, now):
+                    continue
+                tgt = self._other_edge(v)
+                if tgt is not None:
+                    actions.append(ChurnAction("migrate", v, target=tgt))
+
+        return actions

@@ -1,0 +1,232 @@
+"""Event-driven FedEEC rounds over the discrete-event simulator.
+
+Each training round becomes a dependency graph of pair-level work items:
+the BSBODP pair (v, parent(v)) may start only after every pair inside
+v's subtree has finished (post-order dependency), and a node serializes
+the pairs it participates in. Pair duration =
+
+    compute  : distill steps x base_step_s x (straggler/tier factors)
+    comm     : CommMeter-recorded bytes of the pair / link bandwidth
+               + link latency        (repro.sim.network)
+
+so a round's simulated length is its critical path through the tree —
+stragglers and slow links stretch it, parallel subtrees don't. Churn
+actions (dropout / rejoin / migrate) fire at round boundaries; offline
+nodes' pairs are skipped and migrations are charged their embedding
+re-registration bytes *and* transfer time.
+
+Trainers without pair decomposition (the parameter-aggregation
+baselines) fall back to round-granularity timing: the whole
+``train_round`` is one work item whose duration comes from the bytes it
+records. Churn is still applied and logged, but offline baselines'
+clients still train — the coarse mode only times, it does not subset.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+from repro.sim.churn import ChurnProcess
+from repro.sim.events import EventLog, EventQueue
+from repro.sim.network import NetworkModel, link_kind
+from repro.sim.scenarios import ScenarioConfig
+
+
+class SimEngine:
+    def __init__(
+        self,
+        trainer,
+        scenario: ScenarioConfig,
+        *,
+        seed: int = 0,
+    ):
+        self.trainer = trainer
+        self.tree = trainer.tree
+        self.sc = scenario
+        self.net = NetworkModel(
+            self.tree,
+            end_edge=scenario.end_edge,
+            edge_cloud=scenario.edge_cloud,
+            other=scenario.other,
+            seed=seed + 1,
+        )
+        self.churn = ChurnProcess(self.tree, scenario, seed=seed + 2)
+        self.queue = EventQueue()
+        self.log = EventLog()
+        self.now = 0.0
+        self.acc_points: list[tuple[float, float]] = []  # (sim_s, acc)
+        self._in_migrate = False
+        # log migrations initiated by the trainer itself (e.g. DemLearn's
+        # self-organizing re-clustering), not just by the churn process
+        if hasattr(self.tree, "on_migrate"):
+            self.tree.on_migrate(self._external_migration)
+        for v in sorted(self.churn.stragglers):
+            self.log.note(0.0, "straggle", node=v,
+                          slowdown=scenario.straggler_slowdown)
+
+    # -- hooks -------------------------------------------------------------
+
+    def _external_migration(self, node: str, old: str, new: str) -> None:
+        if not self._in_migrate:
+            self.log.note(self.now, "migrate", node=node, target=new,
+                          source="trainer")
+
+    # -- churn application -------------------------------------------------
+
+    def _apply_migration(self, node: str, target: str) -> tuple[float, float]:
+        """Re-parent ``node`` and return the simulated transfer time of the
+        embedding re-registration up the new path."""
+        self._in_migrate = True
+        try:
+            if hasattr(self.trainer, "migrate"):
+                with self.trainer.comm.span() as sp:
+                    self.trainer.migrate(node, target)
+                nbytes = sum(sp.by_link.values())
+            else:
+                self.tree.migrate(node, target)
+                nbytes = 0.0
+        finally:
+            self._in_migrate = False
+        return self.net.transfer_s(node, nbytes), nbytes
+
+    def _round_churn(self, r: int) -> dict[str, float]:
+        """Apply and log this round's churn; returns node -> busy-until
+        times for nodes delayed by migration transfers."""
+        busy: dict[str, float] = {}
+        for act in self.churn.draw_round(r, self.now):
+            if act.kind == "migrate":
+                if act.target not in self.tree.nodes or \
+                        act.node not in self.tree.parent:
+                    self.log.note(self.now, "migrate_refused", node=act.node,
+                                  target=act.target)
+                    continue
+                if self.tree.parent[act.node] == act.target:
+                    continue
+                dur, nbytes = self._apply_migration(act.node, act.target)
+                busy[act.node] = max(busy.get(act.node, 0.0), self.now + dur)
+                self.log.note(self.now, "migrate", node=act.node,
+                              target=act.target, bytes=nbytes,
+                              dur=round(dur, 6))
+            elif act.kind == "dropout":
+                self.log.note(self.now, "dropout", node=act.node,
+                              until=round(act.until, 6))
+            elif act.kind == "rejoin":
+                self.log.note(self.now, "rejoin", node=act.node)
+        return busy
+
+    # -- pair-level round --------------------------------------------------
+
+    def _pair_compute_s(self, child: str, parent: str) -> float:
+        steps = 1
+        if hasattr(self.trainer, "pair_steps"):
+            steps = self.trainer.pair_steps(child, parent)
+        sc = self.sc
+        f_child = self.churn.compute_factor(child)
+        f_parent = self.churn.compute_factor(parent) / sc.tier_speedup
+        # both directions of BSBODP run `steps` distillation steps
+        return steps * sc.base_step_s * (f_child + f_parent)
+
+    def _run_round_pairs(self, r: int, busy: dict[str, float]) -> None:
+        tree, q = self.tree, self.queue
+        t0 = self.now
+        online = lambda v: self.churn.is_online(v, t0)
+
+        pairs: list[tuple[str, str]] = []
+        for v in tree.post_order():
+            if v == tree.root:
+                continue
+            p = tree.parent[v]
+            if online(v) and online(p):
+                pairs.append((v, p))
+            else:
+                self.log.note(t0, "pair_skip", node=v, target=p,
+                              offline=(v if not online(v) else p))
+        if not pairs:
+            # every pair skipped (e.g. all edges down): idle until the
+            # earliest offline window expires so nodes can rejoin — without
+            # this the clock freezes and the outage never ends
+            pending = [t for t in self.churn.offline_until.values()
+                       if t > t0]
+            self.now = min(pending) if pending else t0 + self.sc.base_step_s
+            self.log.note(self.now, "idle", reason="no schedulable pairs")
+            return
+
+        scheduled = {v for v, _ in pairs}
+        # pair (v, p) waits for every scheduled pair (c, v), c ∈ children(v)
+        deps = {
+            v: sum(1 for c in tree.children[v] if c in scheduled)
+            for v, _ in pairs
+        }
+        ready = dict(busy)  # node -> time it becomes free
+
+        def schedule(v: str, p: str, enabled_at: float) -> None:
+            start = max(enabled_at, ready.get(v, t0), ready.get(p, t0), t0)
+            with self.trainer.comm.span() as sp:
+                self.trainer.bsbodp_pair(v, p)
+            nbytes = sum(sp.by_link.values())
+            dur = self._pair_compute_s(v, p) + self.net.transfer_s(v, nbytes)
+            ready[v] = ready[p] = start + dur
+            q.push(start, "pair_start", v, p)
+            q.push(start + dur, "pair_done", v, p,
+                   bytes=nbytes, dur=round(dur, 6))
+
+        for v, p in pairs:
+            if deps[v] == 0:
+                schedule(v, p, t0)
+
+        while q:
+            ev = q.pop()
+            self.now = max(self.now, ev.time)
+            self.log.append(ev)
+            if ev.kind != "pair_done":
+                continue
+            parent = ev.target
+            if parent == tree.root or parent not in scheduled:
+                continue
+            deps[parent] -= 1
+            if deps[parent] == 0:
+                schedule(parent, tree.parent[parent], ev.time)
+
+    def _run_round_coarse(self, r: int, busy: dict[str, float]) -> None:
+        """Round-granularity fallback for non-pair trainers."""
+        t0 = max([self.now] + list(busy.values()))
+        with self.trainer.comm.span() as sp:
+            self.trainer.train_round()
+        comm_s = sum(
+            self.net.specs[k].latency_s
+            + v / self.net.specs[k].bandwidth_Bps
+            for k, v in sp.by_link.items()
+        )
+        slow = max(
+            [self.churn.compute_factor(v) for v in self.churn.devices] or [1.0]
+        )
+        comp_s = self.sc.base_step_s * slow
+        ev = self.queue.push(t0 + comm_s + comp_s, "round_work",
+                             bytes=sum(sp.by_link.values()),
+                             dur=round(comm_s + comp_s, 6))
+        self.queue.pop()
+        self.now = ev.time
+        self.log.append(ev)
+
+    # -- driver ------------------------------------------------------------
+
+    def run(
+        self,
+        rounds: int,
+        *,
+        eval_fn: Optional[Callable[[], float]] = None,
+        eval_every: int = 1,
+    ) -> EventLog:
+        pairwise = hasattr(self.trainer, "bsbodp_pair")
+        for r in range(rounds):
+            self.log.note(self.now, "round_start", round=r)
+            busy = self._round_churn(r)
+            if pairwise:
+                self._run_round_pairs(r, busy)
+            else:
+                self._run_round_coarse(r, busy)
+            self.log.note(self.now, "round_end", round=r)
+            if eval_fn and ((r + 1) % eval_every == 0 or r == rounds - 1):
+                acc = eval_fn()
+                self.acc_points.append((round(self.now, 6), acc))
+                self.log.note(self.now, "eval", round=r, acc=round(acc, 6))
+        return self.log

@@ -1,0 +1,99 @@
+"""Deterministic discrete-event machinery.
+
+The queue is a binary heap keyed on ``(time, seq)`` where ``seq`` is a
+monotonically increasing insertion counter — two events at the same
+simulated instant always pop in insertion order, so a run is a pure
+function of (scenario, seed) and can be replayed bit-for-bit.
+
+The log keeps one flat dict per event (JSON-serializable); its
+``signature()`` is a stable hash used by the determinism tests and by
+``runner.py --verify`` to prove replays are identical.
+"""
+from __future__ import annotations
+
+import hashlib
+import heapq
+import json
+from dataclasses import dataclass, field
+from typing import Any
+
+
+@dataclass(frozen=True)
+class Event:
+    """One scheduled occurrence in the simulation."""
+
+    time: float
+    seq: int
+    kind: str  # round_start | pair_start | pair_done | dropout | rejoin |
+    #            migrate | straggle | round_end | eval
+    node: str = ""
+    target: str = ""
+    payload: dict = field(default_factory=dict)
+
+    def record(self) -> dict[str, Any]:
+        rec = {"t": round(self.time, 6), "seq": self.seq, "kind": self.kind}
+        if self.node:
+            rec["node"] = self.node
+        if self.target:
+            rec["target"] = self.target
+        if self.payload:
+            rec.update(self.payload)
+        return rec
+
+
+class EventQueue:
+    """Min-heap of events ordered by (time, insertion seq)."""
+
+    def __init__(self):
+        self._heap: list[tuple[float, int, Event]] = []
+        self._seq = 0
+
+    def push(self, time: float, kind: str, node: str = "", target: str = "",
+             **payload) -> Event:
+        ev = Event(time, self._seq, kind, node, target, dict(payload))
+        heapq.heappush(self._heap, (time, self._seq, ev))
+        self._seq += 1
+        return ev
+
+    def pop(self) -> Event:
+        return heapq.heappop(self._heap)[2]
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def __bool__(self) -> bool:
+        return bool(self._heap)
+
+
+class EventLog:
+    """Append-only structured log of everything the simulator did."""
+
+    def __init__(self):
+        self.entries: list[dict] = []
+
+    def append(self, ev: Event) -> None:
+        self.entries.append(ev.record())
+
+    def note(self, time: float, kind: str, **fields) -> None:
+        rec = {"t": round(time, 6), "seq": -1, "kind": kind}
+        rec.update(fields)
+        self.entries.append(rec)
+
+    def count(self, kind: str) -> int:
+        return sum(1 for e in self.entries if e["kind"] == kind)
+
+    def counts(self) -> dict[str, int]:
+        out: dict[str, int] = {}
+        for e in self.entries:
+            out[e["kind"]] = out.get(e["kind"], 0) + 1
+        return dict(sorted(out.items()))
+
+    def to_json(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.entries, f, indent=1)
+
+    def signature(self) -> str:
+        """Stable content hash — identical across replays of the same
+        (scenario, seed); rounding in ``Event.record`` absorbs float fuzz."""
+        blob = json.dumps(self.entries, sort_keys=True).encode()
+        return hashlib.sha256(blob).hexdigest()[:16]

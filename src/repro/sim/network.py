@@ -1,0 +1,76 @@
+"""Per-link latency/bandwidth models for the EEC-NET.
+
+Links are classified by the same tiers ``CommMeter`` uses ("end-edge",
+"edge-cloud", "other"); each tier has a ``LinkSpec`` (one-way latency +
+bandwidth), and every concrete link gets a deterministic per-link speed
+factor so that two clients under the same edge don't share an identical
+channel (cf. HierFL / HFEL latency models).
+
+Transfer time of n bytes over the link above ``child``:
+
+    t = latency + n / (bandwidth * speed_factor(child))
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.topology import Tree, link_kind  # noqa: F401  (re-export)
+
+MBPS = 1e6 / 8  # bytes/second per megabit-per-second
+
+
+@dataclass(frozen=True)
+class LinkSpec:
+    """One link tier: one-way latency (s), bandwidth (bytes/s), and the
+    half-width of the uniform per-link speed spread (0.2 → ±20%)."""
+
+    latency_s: float
+    bandwidth_Bps: float
+    spread: float = 0.2
+
+
+# Nominal tiers: wireless access (end-edge), metro backhaul (edge-cloud).
+DEFAULT_END_EDGE = LinkSpec(latency_s=0.020, bandwidth_Bps=10 * MBPS)
+DEFAULT_EDGE_CLOUD = LinkSpec(latency_s=0.050, bandwidth_Bps=100 * MBPS)
+DEFAULT_OTHER = LinkSpec(latency_s=0.030, bandwidth_Bps=50 * MBPS)
+
+
+class NetworkModel:
+    """Maps (link, bytes) -> seconds. Per-link speed factors are drawn once
+    from the seed, so the network is heterogeneous but fully reproducible.
+    Factors are keyed by node name, not topology position: they follow a
+    client through migrations (its radio doesn't change when it re-parents).
+    """
+
+    def __init__(
+        self,
+        tree: Tree,
+        *,
+        end_edge: LinkSpec = DEFAULT_END_EDGE,
+        edge_cloud: LinkSpec = DEFAULT_EDGE_CLOUD,
+        other: LinkSpec = DEFAULT_OTHER,
+        seed: int = 0,
+    ):
+        self.tree = tree
+        self.specs = {"end-edge": end_edge, "edge-cloud": edge_cloud,
+                      "other": other}
+        rng = np.random.default_rng(seed)
+        self._factor: dict[str, float] = {}
+        for v in sorted(tree.parent):  # sorted → independent of dict order
+            spread = self.specs[link_kind(tree, v)].spread
+            self._factor[v] = float(1.0 + rng.uniform(-spread, spread))
+
+    def spec(self, child: str) -> LinkSpec:
+        return self.specs[link_kind(self.tree, child)]
+
+    def speed_factor(self, child: str) -> float:
+        return self._factor.get(child, 1.0)
+
+    def transfer_s(self, child: str, nbytes: float) -> float:
+        """Seconds to move ``nbytes`` across the link above ``child``."""
+        if nbytes <= 0:
+            return 0.0
+        s = self.spec(child)
+        return s.latency_s + nbytes / (s.bandwidth_Bps * self.speed_factor(child))

@@ -1,0 +1,147 @@
+"""Scenario registry: one ``ScenarioConfig`` per named network condition.
+
+A scenario bundles the link tiers, the compute model (base step time +
+straggler population), and the churn process (dropout / rejoin /
+mobility / scripted trace). Scenarios are frozen dataclasses so a
+(scenario, seed) pair fully determines a simulation.
+
+    from repro.sim import get_scenario
+    sc = get_scenario("mobile_clients")
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Tuple
+
+from repro.sim.network import (
+    DEFAULT_EDGE_CLOUD,
+    DEFAULT_END_EDGE,
+    DEFAULT_OTHER,
+    LinkSpec,
+)
+
+
+@dataclass(frozen=True)
+class TraceEntry:
+    """One scripted churn action for trace replay: at the start of round
+    ``round`` apply ``kind`` in {dropout, migrate, rejoin} to ``node``.
+    ``target`` names the destination edge for migrations; ``duration_s``
+    is the offline window for dropouts."""
+
+    round: int
+    kind: str
+    node: str
+    target: str = ""
+    duration_s: float = 0.0
+
+
+@dataclass(frozen=True)
+class ScenarioConfig:
+    name: str
+    description: str = ""
+
+    # -- link tiers --------------------------------------------------------
+    end_edge: LinkSpec = DEFAULT_END_EDGE
+    edge_cloud: LinkSpec = DEFAULT_EDGE_CLOUD
+    other: LinkSpec = DEFAULT_OTHER
+
+    # -- compute model -----------------------------------------------------
+    # nominal seconds per distillation step on a leaf; interior tiers are
+    # faster by tier_speedup per tier above the leaves
+    base_step_s: float = 0.02
+    tier_speedup: float = 4.0
+    straggler_frac: float = 0.0  # fraction of leaves that are stragglers
+    straggler_slowdown: float = 1.0  # compute multiplier for stragglers
+
+    # -- stochastic churn (per round) -------------------------------------
+    dropout_prob: float = 0.0  # per-leaf chance of going offline
+    edge_dropout_prob: float = 0.0  # per-edge chance of going offline
+    dropout_s: Tuple[float, float] = (5.0, 30.0)  # offline window (uniform)
+    migration_prob: float = 0.0  # per-leaf chance of re-parenting (mobility)
+
+    # -- scripted churn ----------------------------------------------------
+    mass_migration_round: int = -1  # round index; -1 disables
+    mass_migration_frac: float = 0.0  # fraction of leaves moved that round
+    trace: Tuple[TraceEntry, ...] = ()
+
+    def with_overrides(self, **kw) -> "ScenarioConfig":
+        return replace(self, **kw)
+
+
+SCENARIOS: dict[str, ScenarioConfig] = {}
+
+
+def register_scenario(sc: ScenarioConfig) -> ScenarioConfig:
+    assert sc.name not in SCENARIOS, f"duplicate scenario {sc.name!r}"
+    SCENARIOS[sc.name] = sc
+    return sc
+
+
+def get_scenario(name: str) -> ScenarioConfig:
+    if name not in SCENARIOS:
+        raise KeyError(
+            f"unknown scenario {name!r}; known: {sorted(SCENARIOS)}"
+        )
+    return SCENARIOS[name]
+
+
+def list_scenarios() -> list[str]:
+    return sorted(SCENARIOS)
+
+
+# ---------------------------------------------------------------------------
+# Named scenarios
+# ---------------------------------------------------------------------------
+
+register_scenario(ScenarioConfig(
+    "stable",
+    "Ideal EEC-NET: static topology, homogeneous compute, clean links.",
+))
+
+register_scenario(ScenarioConfig(
+    "mobile_clients",
+    "Vehicular/pedestrian ends (§IV-E): frequent re-parenting between "
+    "edges plus occasional connectivity loss while moving.",
+    migration_prob=0.25,
+    dropout_prob=0.15,
+    dropout_s=(2.0, 10.0),
+    end_edge=LinkSpec(latency_s=0.035, bandwidth_Bps=6 * 1e6 / 8, spread=0.4),
+))
+
+register_scenario(ScenarioConfig(
+    "flaky_edge",
+    "Unreliable edge servers: whole-edge outages take their subtree "
+    "offline for tens of simulated seconds.",
+    edge_dropout_prob=0.30,
+    dropout_prob=0.05,
+    dropout_s=(10.0, 40.0),
+))
+
+register_scenario(ScenarioConfig(
+    "straggler_heavy",
+    "Severe end-device heterogeneity: 40% of leaves compute 8x slower, "
+    "stretching the round critical path.",
+    straggler_frac=0.4,
+    straggler_slowdown=8.0,
+))
+
+register_scenario(ScenarioConfig(
+    "mass_migration",
+    "Flash-crowd handover: half of all ends re-parent simultaneously "
+    "mid-training (paper §IV-E at scale).",
+    mass_migration_round=1,
+    mass_migration_frac=0.5,
+    dropout_prob=0.05,
+))
+
+register_scenario(ScenarioConfig(
+    "trace_replay",
+    "Scripted churn from a trace: deterministic dropouts/migrations at "
+    "fixed rounds (stand-in for real mobility traces).",
+    trace=(
+        TraceEntry(0, "dropout", "client1", duration_s=12.0),
+        TraceEntry(1, "migrate", "client0", target="edge1"),
+        TraceEntry(1, "dropout", "client3", duration_s=6.0),
+        TraceEntry(2, "migrate", "client2", target="edge0"),
+    ),
+))

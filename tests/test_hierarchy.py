@@ -12,8 +12,9 @@ from repro.sharding.hierarchy import hier_grad_mean
 
 
 def test_single_device_fallback():
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import compat_mesh
+
+    mesh = compat_mesh((1, 1), ("data", "model"))
     x = {"w": jnp.arange(12.0).reshape(4, 3)}
     out = hier_grad_mean(x, mesh)
     assert jnp.allclose(out["w"], x["w"].mean(0))
@@ -25,8 +26,8 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
 from repro.sharding.hierarchy import hier_grad_mean, edge_only_mean
 
-mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 3)
+from repro.launch.mesh import compat_mesh
+mesh = compat_mesh((2, 2, 2), ("pod", "data", "model"))
 rng = np.random.default_rng(0)
 x = {"w": jnp.asarray(rng.normal(0, 1, (8, 5)), jnp.float32),
      "b": jnp.asarray(rng.normal(0, 1, (8,)), jnp.float32)}

@@ -1,0 +1,124 @@
+"""Migration edge cases (§IV-E): cycle refusal, whole-subtree moves,
+repeated migrations, comm charging, and the single-edge engine demo."""
+import numpy as np
+import pytest
+
+from repro.configs.base import FLConfig
+from repro.core.topology import Tree
+
+
+def _cfg(**kw):
+    # tiny CNNs on every tier — these tests exercise store/topology
+    # bookkeeping, not model capacity
+    base = dict(num_clients=4, num_edges=2, samples_per_client=16,
+                test_samples=64, image_size=8, embed_dim=16,
+                edge_model="cnn2", cloud_model="cnn2")
+    base.update(kw)
+    return FLConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def fedeec():
+    from repro.fl.engine import build_problem, make_trainer
+
+    cfg = _cfg()
+    ds, tree, client_data, auto = build_problem(cfg)
+    return make_trainer("fedeec", cfg, tree, client_data, auto)
+
+
+def _store_sizes(tr):
+    return {v: len(tr.embeddings[v][1]) for v in tr.tree.nodes}
+
+
+def test_migrate_charges_comm_and_updates_stores(fedeec):
+    tr = fedeec
+    before = dict(tr.comm.bytes)
+    n_client = len(tr.embeddings["client0"][1])
+    src, dst = tr.tree.parent["client0"], "edge1"
+    tr.migrate("client0", dst)
+    assert tr.tree.parent["client0"] == dst
+    # re-registration bytes were charged (Table VII init term per hop)
+    delta = {k: tr.comm.bytes[k] - before.get(k, 0) for k in tr.comm.bytes}
+    assert sum(delta.values()) > 0
+    assert delta.get("end-edge", 0) > 0  # client0 -> edge1 hop
+    assert delta.get("edge-cloud", 0) > 0  # edge1 -> cloud hop
+    # stores reflect the move: src lost n_client samples, dst gained them
+    sizes = _store_sizes(tr)
+    assert sizes[dst] == sum(
+        len(tr.embeddings[c][1]) for c in tr.tree.children[dst]
+    )
+    assert sizes["cloud"] == sum(
+        len(tr.embeddings[v][1]) for v in tr.tree.leaves
+        if v in tr.client_data
+    )
+    tr.tree.validate()
+
+
+def test_repeated_migrations_keep_stores_consistent(fedeec):
+    tr = fedeec
+    for dst in ("edge0", "edge1", "edge0"):
+        tr.migrate("client2", dst)
+        assert tr.tree.parent["client2"] == dst
+    total = sum(len(tr.embeddings[c][1]) for c in tr.client_data)
+    assert len(tr.embeddings["cloud"][1]) == total
+    tr.train_round()  # still trainable after churn
+    tr.tree.validate()
+
+
+def test_migrating_all_clients_empties_edge_without_crash():
+    from repro.fl.engine import build_problem, make_trainer
+
+    cfg = _cfg()
+    ds, tree, client_data, auto = build_problem(cfg)
+    tr = make_trainer("fedeec", cfg, tree, client_data, auto)
+    movers = [c for c in list(tr.tree.children["edge0"])]
+    for c in movers:
+        tr.migrate(c, "edge1")
+    assert tr.tree.children["edge0"] == []
+    assert len(tr.embeddings["edge0"][1]) == 0
+    assert len(tr.embeddings["edge1"][1]) == sum(
+        len(tr.client_data[c][1]) for c in tr.client_data
+    )
+    assert tr.pair_steps("edge0", "cloud") == 0
+    tr.train_round()  # empty-edge pair is a no-op, not a crash
+
+
+def test_whole_edge_subtree_migration(fedeec):
+    tr = fedeec
+    # re-parent an entire edge (with its clients) under the other edge:
+    # the tree gains a tier and training still runs
+    tr.migrate("edge0", "edge1")
+    assert tr.tree.parent["edge0"] == "edge1"
+    assert tr.tree.num_tiers == 4
+    assert len(tr.embeddings["cloud"][1]) == sum(
+        len(tr.client_data[c][1]) for c in tr.client_data
+    )
+    tr.train_round()
+    # move it back
+    tr.migrate("edge0", "cloud")
+    assert tr.tree.num_tiers == 3
+
+
+def test_cycle_refused_by_trainer(fedeec):
+    tr = fedeec
+    with pytest.raises(AssertionError):
+        tr.migrate("edge1", tr.tree.children["edge1"][0])
+    with pytest.raises(AssertionError):
+        tr.tree.migrate("cloud", "edge0")
+
+
+def test_migrate_hooks_fire():
+    t = Tree.three_tier(2, 4)
+    seen = []
+    t.on_migrate(lambda n, old, new: seen.append((n, old, new)))
+    t.migrate("client0", "edge1")
+    assert seen == [("client0", "edge0", "edge1")]
+
+
+def test_engine_single_edge_migration_demo_warns_not_crashes():
+    from repro.fl.engine import run_experiment
+
+    cfg = _cfg(num_edges=1)
+    with pytest.warns(UserWarning, match="migration demo skipped"):
+        res = run_experiment("fedeec", cfg, rounds=2, migration_round=0)
+    assert len(res.acc_curve) == 2

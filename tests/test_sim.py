@@ -1,0 +1,272 @@
+"""Discrete-event simulator: queue ordering, network pricing, churn
+determinism, scenario registry, and end-to-end simulated FL runs."""
+import numpy as np
+import pytest
+
+from repro.core.topology import Tree
+from repro.sim.churn import ChurnProcess
+from repro.sim.events import EventLog, EventQueue
+from repro.sim.network import LinkSpec, NetworkModel, link_kind
+from repro.sim.scenarios import (
+    SCENARIOS,
+    ScenarioConfig,
+    TraceEntry,
+    get_scenario,
+    list_scenarios,
+)
+
+# ---------------------------------------------------------------------------
+# events
+# ---------------------------------------------------------------------------
+
+
+def test_event_queue_orders_by_time_then_insertion():
+    q = EventQueue()
+    q.push(2.0, "b")
+    q.push(1.0, "a1")
+    q.push(1.0, "a2")
+    q.push(0.5, "first")
+    kinds = [q.pop().kind for _ in range(4)]
+    assert kinds == ["first", "a1", "a2", "b"]
+
+
+def test_event_log_counts_and_signature():
+    log1, log2 = EventLog(), EventLog()
+    for log in (log1, log2):
+        log.note(0.0, "round_start", round=0)
+        log.note(1.5, "migrate", node="client0", target="edge1")
+    assert log1.count("migrate") == 1
+    assert log1.counts() == {"round_start": 1, "migrate": 1}
+    assert log1.signature() == log2.signature()
+    log2.note(2.0, "dropout", node="client1")
+    assert log1.signature() != log2.signature()
+
+
+# ---------------------------------------------------------------------------
+# network
+# ---------------------------------------------------------------------------
+
+
+def test_transfer_time_latency_plus_bandwidth():
+    t = Tree.three_tier(2, 4)
+    spec = LinkSpec(latency_s=0.1, bandwidth_Bps=1000.0, spread=0.0)
+    net = NetworkModel(t, end_edge=spec, edge_cloud=spec, seed=0)
+    assert net.transfer_s("client0", 0) == 0.0
+    assert net.transfer_s("client0", 500) == pytest.approx(0.1 + 0.5)
+
+
+def test_per_link_factors_deterministic_and_heterogeneous():
+    t = Tree.three_tier(2, 6)
+    n1 = NetworkModel(t, seed=3)
+    n2 = NetworkModel(t, seed=3)
+    assert all(
+        n1.speed_factor(v) == n2.speed_factor(v) for v in t.parent
+    )
+    factors = {n1.speed_factor(v) for v in t.leaves}
+    assert len(factors) > 1  # heterogeneous channels
+
+
+def test_link_kind_for_emptied_edge():
+    t = Tree.three_tier(2, 2)  # one client per edge
+    t.migrate("client0", "edge1")
+    # edge0 now has no children but is still an edge-cloud link
+    assert t.is_leaf("edge0")
+    assert link_kind(t, "edge0") == "edge-cloud"
+    assert link_kind(t, "client0") == "end-edge"
+
+
+def test_link_kind_unbalanced_tree_keeps_devices_end_edge():
+    t = Tree.three_tier(2, 4)
+    t.migrate("edge0", "edge1")  # whole-edge move: tree is now 4 tiers
+    # edge1's direct clients sit at tier 3 of 4 but are still end devices
+    for c in ("client1", "client3"):
+        assert link_kind(t, c) == "end-edge"
+    assert link_kind(t, "edge0") == "other"
+    assert link_kind(t, "edge1") == "edge-cloud"
+
+
+# ---------------------------------------------------------------------------
+# churn
+# ---------------------------------------------------------------------------
+
+
+def _drain(proc, rounds, dt=10.0):
+    out = []
+    for r in range(rounds):
+        out.extend(
+            (r, a.kind, a.node, a.target) for a in proc.draw_round(r, r * dt)
+        )
+    return out
+
+
+def test_churn_identical_for_same_seed():
+    sc = get_scenario("mobile_clients")
+    t1, t2 = Tree.three_tier(3, 9), Tree.three_tier(3, 9)
+    h1 = _drain(ChurnProcess(t1, sc, seed=5), 5)
+    # replay churn on t2 applying migrations so topology evolves identically
+    p2 = ChurnProcess(t2, sc, seed=5)
+    h2 = []
+    for r in range(5):
+        for a in p2.draw_round(r, r * 10.0):
+            h2.append((r, a.kind, a.node, a.target))
+            if a.kind == "migrate":
+                t2.migrate(a.node, a.target)
+    # histories diverge only if migrations change targets drawn later; on
+    # the static tree t1 we at least need the same first-round draw
+    assert h1[: len([x for x in h1 if x[0] == 0])] == \
+        h2[: len([x for x in h2 if x[0] == 0])]
+
+
+def test_churn_dropout_and_rejoin_cycle():
+    sc = ScenarioConfig("t", dropout_prob=1.0, dropout_s=(5.0, 5.0))
+    t = Tree.three_tier(2, 2)
+    p = ChurnProcess(t, sc, seed=0)
+    acts = p.draw_round(0, 0.0)
+    assert {a.kind for a in acts} == {"dropout"}
+    assert not p.is_online("client0", 0.0)
+    # both clients offline until t=5; at t=6 they rejoin (then drop again)
+    acts = p.draw_round(1, 6.0)
+    kinds = [a.kind for a in acts]
+    assert kinds.count("rejoin") == 2
+
+
+def test_churn_trace_replay_is_scripted():
+    sc = ScenarioConfig(
+        "t2",
+        trace=(
+            TraceEntry(0, "dropout", "client1", duration_s=3.0),
+            TraceEntry(1, "migrate", "client0", target="edge1"),
+        ),
+    )
+    t = Tree.three_tier(2, 4)
+    p = ChurnProcess(t, sc, seed=0)
+    a0 = p.draw_round(0, 0.0)
+    assert [(a.kind, a.node) for a in a0] == [("dropout", "client1")]
+    a1 = p.draw_round(1, 10.0)
+    assert ("migrate", "client0", "edge1") in [
+        (a.kind, a.node, a.target) for a in a1
+    ]
+
+
+def test_straggler_population_from_seed():
+    sc = ScenarioConfig("t3", straggler_frac=0.5, straggler_slowdown=4.0)
+    t = Tree.three_tier(2, 8)
+    p1 = ChurnProcess(t, sc, seed=9)
+    p2 = ChurnProcess(t, sc, seed=9)
+    assert p1.stragglers == p2.stragglers
+    assert len(p1.stragglers) == 4
+    v = sorted(p1.stragglers)[0]
+    assert p1.compute_factor(v) == 4.0
+
+
+# ---------------------------------------------------------------------------
+# scenarios
+# ---------------------------------------------------------------------------
+
+
+def test_scenario_registry_has_the_named_six():
+    for name in ("stable", "mobile_clients", "flaky_edge",
+                 "straggler_heavy", "mass_migration", "trace_replay"):
+        assert name in SCENARIOS, name
+    assert list_scenarios() == sorted(SCENARIOS)
+    with pytest.raises(KeyError):
+        get_scenario("nope")
+
+
+def test_scenario_overrides():
+    sc = get_scenario("stable").with_overrides(dropout_prob=0.5)
+    assert sc.dropout_prob == 0.5
+    assert get_scenario("stable").dropout_prob == 0.0  # frozen original
+
+
+# ---------------------------------------------------------------------------
+# end-to-end simulated runs (small: 4 clients, 2 edges, 2 rounds)
+# ---------------------------------------------------------------------------
+
+
+def _small_cfg(**kw):
+    from repro.configs.base import FLConfig
+
+    # tiny CNNs on every tier: e2e tests exercise the scheduler, not the
+    # models, and per-instance resnet compiles dominate suite runtime
+    base = dict(num_clients=4, num_edges=2, samples_per_client=16,
+                test_samples=64, image_size=8, embed_dim=16,
+                edge_model="cnn2", cloud_model="cnn2")
+    base.update(kw)
+    return FLConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def sim_run():
+    from repro.fl.engine import run_experiment
+
+    cfg = _small_cfg(scenario="trace_replay")
+    return run_experiment("fedeec", cfg, rounds=2), cfg
+
+
+def test_simulated_run_reports_sim_clock(sim_run):
+    res, _ = sim_run
+    assert res.scenario == "trace_replay"
+    assert len(res.sim_times) == len(res.acc_curve) == 2
+    assert res.sim_times[0] > 0
+    assert res.sim_times[1] > res.sim_times[0]
+    assert res.sim_wall_s >= res.sim_times[-1]
+    assert res.event_counts.get("round_end") == 2
+    assert res.event_counts.get("dropout", 0) >= 1
+    assert res.event_counts.get("migrate", 0) >= 1
+    assert len(res.sim_curve) == 2
+
+
+def test_simulated_run_deterministic(sim_run):
+    from repro.fl.engine import run_experiment
+
+    res1, cfg = sim_run
+    res2 = run_experiment("fedeec", cfg, rounds=2)
+    assert res1.event_signature == res2.event_signature
+    assert res1.event_log == res2.event_log
+    assert res1.acc_curve == res2.acc_curve
+    assert res1.sim_times == res2.sim_times
+
+
+def test_simulated_run_seed_changes_event_log():
+    from repro.fl.engine import run_experiment
+
+    cfg = _small_cfg(scenario="mobile_clients", seed=1)
+    res1 = run_experiment("fedeec", cfg, rounds=2)
+    cfg2 = _small_cfg(scenario="mobile_clients", seed=2)
+    res2 = run_experiment("fedeec", cfg2, rounds=2)
+    # different seeds → different churn histories (overwhelmingly likely)
+    assert res1.event_signature != res2.event_signature
+
+
+def test_straggler_scenario_stretches_clock():
+    from repro.fl.engine import run_experiment
+
+    base = _small_cfg(scenario="stable")
+    slow = _small_cfg(scenario="straggler_heavy")
+    r_base = run_experiment("fedeec", base, rounds=1)
+    r_slow = run_experiment("fedeec", slow, rounds=1)
+    assert r_slow.sim_wall_s > r_base.sim_wall_s
+
+
+def test_total_outage_idles_clock_until_rejoin():
+    """If every pair is skipped the clock must advance to the next rejoin
+    instead of freezing (which would make outages permanent)."""
+    from repro.fl.engine import run_experiment
+
+    sc = ScenarioConfig("blackout", dropout_prob=1.0, edge_dropout_prob=1.0,
+                        dropout_s=(5.0, 5.0))
+    res = run_experiment("fedeec", _small_cfg(), rounds=3, scenario=sc)
+    assert res.event_counts.get("idle", 0) >= 1
+    assert res.event_counts.get("rejoin", 0) >= 1
+    assert res.sim_wall_s >= 5.0  # clock moved past the first outage window
+
+
+def test_coarse_mode_for_baselines():
+    from repro.fl.engine import run_experiment
+
+    cfg = _small_cfg(scenario="stable")
+    res = run_experiment("hierfavg", cfg, rounds=2)
+    assert res.event_counts.get("round_work") == 2
+    assert res.sim_wall_s > 0
+    assert len(res.sim_times) == 2
