@@ -49,6 +49,7 @@ def run_cached(key: str, alg: str, cfg: FLConfig, rounds: int, **kw):
         rec["sim_wall_s"] = round(res.sim_wall_s, 1)
         rec["sim_times"] = res.sim_times
         rec["event_counts"] = res.event_counts
+        rec["event_signature"] = res.event_signature
     cache = _load_cache()
     cache[key] = rec
     _save_cache(cache)
@@ -192,6 +193,41 @@ def table_scenarios(quick=False):
             rec["wall_s"] * 1e6 / rounds,
             f"best_acc={rec['best_acc']:.4f} sim_s={rec.get('sim_wall_s', 0):.1f} "
             f"migr={ev.get('migrate', 0)} drop={ev.get('dropout', 0)} "
-            f"skip={ev.get('pair_skip', 0)}",
+            f"skip={ev.get('pair_skip', 0)} "
+            f"sig={rec.get('event_signature', '')}",
         ))
     return rows
+
+
+def scenario_signatures(
+    rounds: int = 2,
+    clients: int = 4,
+    edges: int = 2,
+    algorithms=("fedeec", "hierfavg"),
+) -> dict[str, str]:
+    """Fresh (cache-bypassing) event signatures for every registered
+    scenario x algorithm — the regression gate for scheduler refactors.
+
+    Runs the simulator WITHOUT evaluation so the signature covers pure
+    scheduling (topology, churn, timing, bytes) and stays stable across
+    numerics differences between machines.
+    """
+    from repro.fl.api import create_algorithm
+    from repro.fl.engine import build_problem
+    from repro.sim.engine import SimEngine
+    from repro.sim.scenarios import get_scenario, list_scenarios
+
+    cfg = paper_setting(
+        "synth_cifar10", clients, edges, samples_per_client=16,
+        test_samples=64, image_size=8, embed_dim=16,
+        edge_model="cnn2", cloud_model="cnn2",
+    )
+    out: dict[str, str] = {}
+    for alg in algorithms:
+        for name in list_scenarios():
+            ds, tree, client_data, auto = build_problem(cfg)
+            trainer = create_algorithm(alg, cfg, tree, client_data, auto)
+            engine = SimEngine(trainer, get_scenario(name), seed=cfg.seed)
+            log = engine.run(rounds)
+            out[f"{alg}/{name}"] = log.signature()
+    return out

@@ -6,6 +6,12 @@ experiments/fl_results.json (delete to force re-runs).
   PYTHONPATH=src python -m benchmarks.run            # full (slow: FL rounds)
   PYTHONPATH=src python -m benchmarks.run --quick    # reduced budgets
   PYTHONPATH=src python -m benchmarks.run --only table3,table7
+
+The ``scenarios`` suite doubles as the scheduler regression gate: its
+event signatures are tracked in ``benchmarks/tables/scenarios.json``.
+
+  python -m benchmarks.run --only scenarios --check-tables   # CI gate
+  python -m benchmarks.run --only scenarios --update-tables  # re-baseline
 """
 from __future__ import annotations
 
@@ -15,6 +21,43 @@ import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+TABLES_PATH = os.path.join(os.path.dirname(__file__), "tables",
+                           "scenarios.json")
+
+
+def check_or_update_tables(update: bool) -> int:
+    """Diff fresh scenario event signatures against the tracked table
+    (``--check-tables``), or rewrite the table (``--update-tables``)."""
+    from benchmarks import fl_tables
+
+    sigs = fl_tables.scenario_signatures()
+    if update:
+        os.makedirs(os.path.dirname(TABLES_PATH), exist_ok=True)
+        with open(TABLES_PATH, "w") as f:
+            json.dump(sigs, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {len(sigs)} signatures to {TABLES_PATH}")
+        return 0
+    if not os.path.exists(TABLES_PATH):
+        print(f"error: no tracked table at {TABLES_PATH}; run "
+              "--update-tables first", file=sys.stderr)
+        return 2
+    with open(TABLES_PATH) as f:
+        tracked = json.load(f)
+    bad = 0
+    for key in sorted(set(tracked) | set(sigs)):
+        got, want = sigs.get(key), tracked.get(key)
+        if got != want:
+            bad += 1
+            print(f"MISMATCH {key}: tracked={want} current={got}")
+    if bad:
+        print(f"\n{bad} scenario signature(s) changed. If the scheduler "
+              "change is intentional, re-baseline with --update-tables.",
+              file=sys.stderr)
+        return 1
+    print(f"all {len(sigs)} scenario signatures match {TABLES_PATH}")
+    return 0
 
 
 def roofline_rows():
@@ -47,7 +90,14 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default="")
+    ap.add_argument("--check-tables", action="store_true",
+                    help="diff scenario event signatures against "
+                         "benchmarks/tables/scenarios.json and exit")
+    ap.add_argument("--update-tables", action="store_true",
+                    help="re-baseline benchmarks/tables/scenarios.json")
     args = ap.parse_args()
+    if args.check_tables or args.update_tables:
+        sys.exit(check_or_update_tables(args.update_tables))
     only = set(args.only.split(",")) if args.only else set(SUITES)
 
     from benchmarks import fl_tables, kernel_bench

@@ -1,0 +1,49 @@
+"""Register a custom FL algorithm on the work-item API (~30 lines).
+
+``SampledFedAvg`` subsamples half the clients each round — the classic
+FedAvg client-sampling knob — purely by reshaping ``work_items``; the
+scheduler, the simulator, participation accounting, and the benchmarks
+all pick it up unchanged. See docs/algorithm-api.md for the contract.
+
+    PYTHONPATH=src python examples/custom_algorithm.py
+"""
+import numpy as np
+
+from repro.configs.base import FLConfig
+from repro.fl.api import register_algorithm
+from repro.fl.baselines import HierarchicalFedAvg
+from repro.fl.engine import run_experiment
+
+
+class SampledFedAvg(HierarchicalFedAvg):
+    """HierFAVG with deterministic per-round client sampling."""
+
+    def work_items(self, round, online):
+        items = super().work_items(round, online)
+        clients = sorted(self.client_data)
+        rng = np.random.default_rng((self.cfg.seed, round))
+        keep = set(rng.choice(clients, size=max(1, len(clients) // 2),
+                              replace=False))
+        return [it for it in items
+                if it.kind != "local" or it.node in keep]
+
+
+@register_algorithm("fedavg_sampled")
+def _build(cfg, tree, client_data, auto):
+    return SampledFedAvg(cfg, tree, client_data, seed=cfg.seed)
+
+
+if __name__ == "__main__":
+    cfg = FLConfig(num_clients=8, num_edges=2, samples_per_client=32,
+                   test_samples=256)
+    print("== sampled FedAvg, plain path ==")
+    res = run_experiment("fedavg_sampled", cfg, rounds=4, verbose=True)
+    print(f"best cloud accuracy: {res.best_acc:.4f}")
+
+    print("\n== same algorithm, scheduled by the network simulator ==")
+    res = run_experiment("fedavg_sampled", cfg, rounds=3,
+                         scenario="mobile_clients")
+    started = {e["node"] for e in res.event_log if e["kind"] == "pair_start"}
+    print(f"sim length {res.sim_wall_s:.1f}s, work items ran on: "
+          f"{sorted(v for v in started if v.startswith('client'))}")
+    print(f"event counts: {res.event_counts}")

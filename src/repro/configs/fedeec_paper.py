@@ -51,4 +51,7 @@ PRESETS: dict[str, FLConfig] = {
     "cifar10_stragglers": paper_setting(
         "synth_cifar10", 10, 3, scenario="straggler_heavy"
     ),
+    "cifar10_flash_crowd": paper_setting(
+        "synth_cifar10", 10, 3, scenario="flash_crowd"
+    ),
 }

@@ -13,8 +13,6 @@ FedAgg (the INFOCOM'24 predecessor) is exactly this with SKR disabled
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
 from typing import Callable
 
 import jax
@@ -23,15 +21,20 @@ import numpy as np
 
 from repro.configs.base import FLConfig
 from repro.core import bsbodp
+from repro.core.protocols import BSBODP_SKR
 from repro.core.skr import skr_init, skr_process_batch
 from repro.core.topology import Tree
-from repro.fl.comm import CommMeter
+from repro.fl.api import FLAlgorithm, WorkItem, register_algorithm
 from repro.models.autoencoder import decode, encode
 from repro.models.registry import get_fl_model
 from repro.optim import adamw_init, adamw_update
 
 
-class FedEEC:
+class FedEEC(FLAlgorithm):
+    # BSBODP(+SKR) imposes no structural relation on parent-child model
+    # pairs (R = V x V): every migration is legal (Theorem 1)
+    protocol = BSBODP_SKR
+
     def __init__(
         self,
         cfg: FLConfig,
@@ -43,11 +46,9 @@ class FedEEC:
         model_of: dict[str, str] | None = None,
         seed: int = 0,
     ):
-        self.cfg = cfg
-        self.tree = tree
+        super().__init__(cfg, tree)
         self.auto = auto_params
         self.use_skr = use_skr
-        self.comm = CommMeter()
         self.rng = np.random.default_rng(seed)
         key = jax.random.PRNGKey(seed)
 
@@ -241,7 +242,7 @@ class FedEEC:
     # ------------------------------------------------------------ training
 
     def round_pairs(self) -> list[tuple[str, str]]:
-        """The round's (child, parent) work items in post-order — the unit
+        """The round's (child, parent) pairs in post-order — the unit
         the discrete-event simulator schedules."""
         return [
             (v, self.tree.parent[v])
@@ -249,13 +250,24 @@ class FedEEC:
             if v != self.tree.root
         ]
 
-    def train_round(self, pairs: list[tuple[str, str]] | None = None):
-        """Algorithm 3 FedEECTrain: post-order, each node pairs with parent.
-        ``pairs`` restricts the round to a subset (e.g. online nodes only)."""
-        for v, p in (self.round_pairs() if pairs is None else pairs):
-            self.bsbodp_pair(v, p)
+    def work_items(self, round: int, online) -> list[WorkItem]:
+        """One bidirectional BSBODP "pair" item per (child, parent) link,
+        in post-order; the scheduler's dependency rule (an item waits for
+        the items whose ``peer`` is its ``node``) reproduces Algorithm 3's
+        subtree-before-parent ordering."""
+        return [
+            WorkItem("pair", node=v, peer=p, link=self.link_of(v),
+                     steps=self.pair_steps(v, p))
+            for v, p in self.round_pairs()
+        ]
 
-    def migrate(self, node: str, new_parent: str):
+    def execute(self, item: WorkItem) -> None:
+        self.bsbodp_pair(item.node, item.peer)
+
+    def _model_params(self, node: str):
+        return self.params[node]
+
+    def _do_migrate(self, node: str, new_parent: str):
         """Dynamic migration (§IV-E): legal for any pair under BSBODP+SKR.
 
         The moved subtree's embeddings are (a) dropped from the stores on
@@ -301,3 +313,14 @@ class FedEEC:
 
     def cloud_apply(self):
         return self.apply[self.tree.root]
+
+
+@register_algorithm("fedeec")
+def _fedeec(cfg, tree, client_data, auto):
+    return FedEEC(cfg, tree, client_data, auto, use_skr=True, seed=cfg.seed)
+
+
+@register_algorithm("fedagg")
+def _fedagg(cfg, tree, client_data, auto):
+    # the INFOCOM'24 predecessor == FedEEC with SKR disabled (Table III)
+    return FedEEC(cfg, tree, client_data, auto, use_skr=False, seed=cfg.seed)

@@ -11,8 +11,11 @@ on parent-child model pairs:
   training / sub-model extraction (FedRolex-style), where the child model
   must be a sub-model of the parent's. Migration can be illegal (Theorem 2).
 
-These are *checkable* here: a protocol declares its relation, and the
-engine's migrate() consults `allows_migration` before re-parenting.
+These are *checkable* here: a protocol declares its relation, and
+``FLAlgorithm.migrate`` (repro.fl.api) consults ``allows_migration``
+before every re-parenting — churn-driven or trainer-driven — raising
+``MigrationRefused`` (logged by the simulator as ``migrate_refused``
+with ``reason="protocol"``) when the relation forbids the move.
 """
 from __future__ import annotations
 
@@ -34,7 +37,13 @@ class Protocol:
         """Can ``node`` become a child of ``new_parent``?"""
         if self.kind == "equivalence":
             return True  # Theorem 1
-        return bool(self.relation(model_of(node), model_of(new_parent)))
+        a, b = model_of(node), model_of(new_parent)
+        if a is None or b is None:
+            # the algorithm exposes no per-node models: the partial-order
+            # relation is unverifiable, so the move must be refused (the
+            # safe direction under Theorem 2)
+            return False
+        return bool(self.relation(a, b))
 
 
 def same_structure(a, b) -> bool:

@@ -1,2 +1,11 @@
-"""FL simulation plane: nodes, engine, baselines, communication accounting."""
+"""FL simulation plane: algorithm API, engine, baselines, communication
+accounting."""
+from repro.fl.api import (  # noqa: F401
+    FLAlgorithm,
+    MigrationRefused,
+    WorkItem,
+    create_algorithm,
+    list_algorithms,
+    register_algorithm,
+)
 from repro.fl.engine import run_experiment  # noqa: F401

@@ -1,0 +1,225 @@
+"""Unified FL-algorithm work-item API (paper §IV-E framing).
+
+Every trainer is an :class:`FLAlgorithm`: it decomposes a round into
+:class:`WorkItem`\\ s (the unit the discrete-event simulator schedules and
+prices), executes them one at a time, and declares the interaction
+:class:`~repro.core.protocols.Protocol` that decides which migrations are
+legal (Theorems 1-2). The scheduler — plain loop or ``repro.sim`` — is
+the same for FedEEC and every parameter-aggregation baseline; no
+algorithm-specific probing.
+
+Round lifecycle (both execution paths):
+
+    begin_round(r)                  # trainer-driven re-clustering etc.
+    for item in work_items(r, online):
+        execute(item)               # skipped when a participant is offline
+    end_round(r)                    # cross-item barrier (e.g. cloud agg)
+
+Algorithms register themselves under a CLI name::
+
+    @register_algorithm("myalg")
+    def _build(cfg, tree, client_data, auto):
+        return MyAlg(cfg, tree, client_data)
+
+and are constructed by :func:`create_algorithm` from an ``FLConfig`` plus
+the shared problem inputs (tree / client data / frozen autoencoder).
+"""
+from __future__ import annotations
+
+from abc import ABC, abstractmethod
+from dataclasses import dataclass
+from typing import Callable, Iterable, Optional
+
+from repro.core.protocols import Protocol
+from repro.core.topology import Tree, link_kind
+from repro.fl.comm import CommMeter
+
+
+@dataclass(frozen=True)
+class WorkItem:
+    """One schedulable unit of a training round.
+
+    kind:
+      "pair"       bidirectional BSBODP distillation between node and peer
+      "local"      local SGD on ``node``, result destined for ``peer``
+      "aggregate"  ``node`` aggregates its children's results for ``peer``
+    ``node`` is the child side of the link the item's traffic crosses (the
+    simulator prices transfers on the link above ``node``); ``steps`` is
+    the compute step count the simulator turns into seconds.
+    """
+
+    kind: str
+    node: str
+    peer: str = ""
+    link: str = ""
+    steps: int = 1
+
+
+class MigrationRefused(RuntimeError):
+    """A migration the algorithm's interaction protocol forbids (Thm 2)."""
+
+    def __init__(self, node: str, new_parent: str, protocol: Protocol):
+        self.node, self.new_parent, self.protocol = node, new_parent, protocol
+        super().__init__(
+            f"protocol {protocol.name!r} ({protocol.kind}) refuses "
+            f"re-parenting {node!r} under {new_parent!r}"
+        )
+
+
+class FLAlgorithm(ABC):
+    """Abstract FL trainer: work-item decomposition + protocol-gated
+    migration + participation masking, over a shared ``Tree``."""
+
+    #: interaction protocol governing migration legality (§IV-E). Concrete
+    #: algorithms set this; instances may override (e.g. to demo Theorem 2).
+    protocol: Protocol | None = None
+
+    def __init__(self, cfg, tree: Tree):
+        self.cfg = cfg
+        self.tree = tree
+        self.comm = CommMeter()
+        self.participation: frozenset[str] | None = None
+        self._round = 0
+        self._refuse_hooks: list[Callable[[str, str, str], None]] = []
+
+    # -- round decomposition ----------------------------------------------
+
+    @abstractmethod
+    def work_items(self, round: int, online: Callable[[str], bool]) -> list[WorkItem]:
+        """The round's full work-item list in deterministic order, at most
+        one item per node (the simulator's dependency graph is keyed by
+        node). Items whose participants are offline are *included* — the
+        scheduler decides what to skip (and logs it); ``online`` lets
+        adaptive algorithms reshape the round instead."""
+
+    @abstractmethod
+    def execute(self, item: WorkItem) -> None:
+        """Run one work item, recording its traffic on ``self.comm``."""
+
+    def begin_round(self, round: int) -> None:
+        """Pre-round hook (e.g. DemLearn re-clustering). May migrate."""
+
+    def end_round(self, round: int) -> None:
+        """Post-round barrier across items (e.g. cloud aggregation)."""
+
+    # -- participation ------------------------------------------------------
+
+    def set_participation(self, mask: Optional[Iterable[str]]) -> None:
+        """Restrict data-holding devices to ``mask`` (None = everyone).
+        Non-device nodes always participate."""
+        self.participation = None if mask is None else frozenset(mask)
+
+    def participates(self, v: str) -> bool:
+        if self.participation is None or not self.tree.is_device(v):
+            return True
+        return v in self.participation
+
+    # -- plain (round-counted) execution ------------------------------------
+
+    def train_round(self) -> None:
+        r = self._round
+        self.begin_round(r)
+        for item in self.work_items(r, self.participates):
+            if self.participates(item.node) and (
+                not item.peer or self.participates(item.peer)
+            ):
+                self.execute(item)
+        self.end_round(r)
+        self._round += 1
+
+    # -- migration (§IV-E) ---------------------------------------------------
+
+    def on_migrate_refused(self, hook: Callable[[str, str, str], None]) -> None:
+        """Register a callback fired with (node, target, reason) whenever a
+        migration is refused — the simulator logs these."""
+        self._refuse_hooks.append(hook)
+
+    def migrate(self, node: str, new_parent: str) -> None:
+        """Re-parent ``node`` under ``new_parent`` iff the declared
+        protocol's relation allows it; raise :class:`MigrationRefused`
+        (after notifying refuse hooks) otherwise."""
+        if self.protocol is not None and not self.protocol.allows_migration(
+            self._model_params, node, new_parent
+        ):
+            for hook in self._refuse_hooks:
+                hook(node, new_parent, "protocol")
+            raise MigrationRefused(node, new_parent, self.protocol)
+        self._do_migrate(node, new_parent)
+
+    def try_migrate(self, node: str, new_parent: str) -> bool:
+        """Non-raising :meth:`migrate`; refuse hooks still fire."""
+        try:
+            self.migrate(node, new_parent)
+        except MigrationRefused:
+            return False
+        return True
+
+    def _do_migrate(self, node: str, new_parent: str) -> None:
+        """Protocol-approved re-parenting; override to move algorithm state
+        (embedding stores, optimizer slots) along with the node."""
+        self.tree.migrate(node, new_parent)
+
+    def _model_params(self, node: str):
+        """Model parameters deployed on ``node`` — what partial-order
+        protocol relations compare (¬ Model(a) ⊑ Model(b) ⇒ refuse)."""
+        return None
+
+    # -- cloud model ---------------------------------------------------------
+
+    @abstractmethod
+    def cloud_params(self):
+        """Parameters of the cloud (root) model under evaluation."""
+
+    @abstractmethod
+    def cloud_apply(self):
+        """apply_fn(params, x) -> logits for the cloud model."""
+
+    # -- helpers -------------------------------------------------------------
+
+    def link_of(self, node: str) -> str:
+        return link_kind(self.tree, node)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+AlgorithmFactory = Callable[..., FLAlgorithm]
+
+ALGORITHM_REGISTRY: dict[str, AlgorithmFactory] = {}
+
+
+def register_algorithm(name: str):
+    """Register ``factory(cfg, tree, client_data, auto) -> FLAlgorithm``
+    under a CLI/benchmark name."""
+
+    def deco(factory: AlgorithmFactory) -> AlgorithmFactory:
+        if name in ALGORITHM_REGISTRY:
+            raise ValueError(f"duplicate algorithm {name!r}")
+        ALGORITHM_REGISTRY[name] = factory
+        return factory
+
+    return deco
+
+
+def _load_builtin() -> None:
+    # registration side effects live next to the class definitions
+    import repro.core.fedeec  # noqa: F401
+    import repro.fl.baselines  # noqa: F401
+
+
+def create_algorithm(name: str, cfg, tree, client_data, auto) -> FLAlgorithm:
+    """Construct a registered algorithm from the config and the shared
+    problem inputs (see ``repro.fl.engine.build_problem``)."""
+    _load_builtin()
+    key = name.lower()
+    if key not in ALGORITHM_REGISTRY:
+        raise KeyError(
+            f"unknown algorithm {name!r}; known: {list_algorithms()}"
+        )
+    return ALGORITHM_REGISTRY[key](cfg, tree, client_data, auto)
+
+
+def list_algorithms() -> list[str]:
+    _load_builtin()
+    return sorted(ALGORITHM_REGISTRY)

@@ -1,4 +1,4 @@
-"""Baseline HFL algorithms (paper §V-A.3).
+"""Baseline HFL algorithms (paper §V-A.3) on the FLAlgorithm work-item API.
 
 All parameter-aggregation baselines deploy the SAME model structure on every
 node (paper §V-B.3: uniformly M_end^1, since aggregation requires it) — that
@@ -14,19 +14,24 @@ is precisely the bottleneck effect FedEEC removes.
   * DemLearn-lite (Nguyen et al., TNNLS'23): self-organizing hierarchy —
     clients re-clustered by label histogram every round; plain averaging.
   * FedAvg    (two-tier flat reference).
+
+A round decomposes into one "local" work item per participating client
+plus one "aggregate" item per edge; the cloud aggregation is the
+``end_round`` barrier. Offline / non-participating clients' items are
+skipped by the scheduler, so dropout removes them from the
+``aggregate_params`` weights instead of silently training everyone.
 """
 from __future__ import annotations
 
-from typing import Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import FLConfig
-from repro.core.protocols import aggregate_params
+from repro.core.protocols import PARAM_AVG, aggregate_params
 from repro.core.topology import Tree
-from repro.fl.comm import CommMeter
+from repro.fl.api import FLAlgorithm, WorkItem, register_algorithm
 from repro.models.registry import get_fl_model
 from repro.optim import adamw_init, adamw_update
 
@@ -66,9 +71,13 @@ def _quantize(delta, levels: int = 256, rng=None):
     return jax.tree.map(lambda x: jnp.asarray(q(x)), delta)
 
 
-class HierarchicalFedAvg:
+class HierarchicalFedAvg(FLAlgorithm):
     """HierFAVG family engine; momentum/quantization/self-organization are
     knobs on the same two-stage aggregation loop."""
+
+    # identical structures on every node: parameter averaging is an
+    # equivalence protocol — any re-parenting is legal (Theorem 1)
+    protocol = PARAM_AVG
 
     def __init__(
         self,
@@ -83,13 +92,12 @@ class HierarchicalFedAvg:
         kappa2: int = 1,
         seed: int = 0,
     ):
-        self.cfg, self.tree = cfg, tree
+        super().__init__(cfg, tree)
         self.client_data = client_data
         self.momentum = momentum
         self.quantize = quantize
         self.self_organize = self_organize
         self.kappa1, self.kappa2 = kappa1, kappa2
-        self.comm = CommMeter()
         self.rng = np.random.default_rng(seed)
 
         init_fn, apply_fn = get_fl_model(cfg.end_model)
@@ -103,6 +111,13 @@ class HierarchicalFedAvg:
         self.step_fn = _local_train_fn(apply_fn, cfg.lr)
         self._momentum_buf = None
         self._nfloats = _num_floats(self.global_params)
+        # per-round scratch: edge -> [(client, params)], edge -> params
+        self._round_updates: dict[str, list] = {}
+        self._edge_params: dict[str, object] = {}
+        self._edge_weight: dict[str, float] = {}
+
+    def _model_params(self, node: str):
+        return self.global_params
 
     def _client_update(self, v: str, params):
         x, y = self.client_data[v]
@@ -116,9 +131,20 @@ class HierarchicalFedAvg:
         self.opt[v] = opt
         return p
 
+    def _trained_params(self, v: str, base):
+        """κ1 local steps from ``base``, with optional QSGD quantization of
+        the resulting delta."""
+        p = self._client_update(v, base)
+        if self.quantize:
+            delta = jax.tree.map(lambda a, b: a - b, p, base)
+            delta = _quantize(delta, rng=self.rng)
+            p = jax.tree.map(lambda b, d: b + d, base, delta)
+        return p
+
     def _maybe_cluster(self):
         """DemLearn-lite: re-assign clients to edges by label-histogram
-        k-means (self-organizing hierarchy)."""
+        k-means (self-organizing hierarchy). Moves go through the
+        protocol gate; PARAM_AVG is an equivalence so none is refused."""
         if not self.self_organize:
             return
         C = self.cfg.num_classes
@@ -141,41 +167,78 @@ class HierarchicalFedAvg:
         for i, v in enumerate(leaves):
             target = edges[int(assign[i])]
             if self.tree.parent[v] != target:
-                self.tree.migrate(v, target)
+                self.try_migrate(v, target)
 
-    def train_round(self):
+    # -- work-item decomposition -------------------------------------------
+
+    def begin_round(self, round: int) -> None:
         self._maybe_cluster()
-        cfg = self.cfg
-        edge_params: dict[str, object] = {}
-        for _ in range(self.kappa2):
-            for e in self.tree.children[self.tree.root]:
-                clients = [c for c in self.tree.children[e] if self.tree.is_leaf(c)]
-                if not clients:
-                    edge_params[e] = self.global_params
-                    continue
-                updated, weights = [], []
-                for c in clients:
-                    p = self._client_update(c, edge_params.get(e, self.global_params))
-                    if self.quantize:
-                        base = edge_params.get(e, self.global_params)
-                        delta = jax.tree.map(lambda a, b: a - b, p, base)
-                        delta = _quantize(delta, rng=self.rng)
-                        p = jax.tree.map(lambda b, d: b + d, base, delta)
-                    updated.append(p)
-                    weights.append(len(self.client_data[c][1]))
-                    # up + down parameter transfer
-                    self.comm.record("end-edge", 2 * self._nfloats, "params")
-                edge_params[e] = aggregate_params(updated, weights)
-        # cloud aggregation
-        ws = [
-            sum(len(self.client_data[c][1]) for c in self.tree.leaf_set(e))
-            for e in self.tree.children[self.tree.root]
-        ]
+        self._round_updates = {}
+        self._edge_params = {}
+        self._edge_weight = {}
+
+    def work_items(self, round: int, online) -> list[WorkItem]:
+        """Per-client "local" items (κ1 steps each) followed by one
+        "aggregate" item per edge; an edge's aggregation waits for its
+        clients via the scheduler's peer-of dependency rule."""
+        items: list[WorkItem] = []
+        root = self.tree.root
+        for e in self.tree.children[root]:
+            for c in self.tree.children[e]:
+                if self.tree.is_leaf(c):
+                    items.append(WorkItem(
+                        "local", node=c, peer=e, link=self.link_of(c),
+                        steps=self.cfg.local_steps * self.kappa1,
+                    ))
+            items.append(WorkItem(
+                "aggregate", node=e, peer=root, link=self.link_of(e),
+            ))
+        return items
+
+    def execute(self, item: WorkItem) -> None:
+        if item.kind == "local":
+            p = self._trained_params(item.node, self.global_params)
+            self._round_updates.setdefault(item.peer, []).append((item.node, p))
+            # up + down parameter transfer on the client's access link
+            self.comm.record(item.link, 2 * self._nfloats, "params")
+            return
+        # "aggregate": edge-level FedAvg over this round's participants
+        e = item.node
+        ups = self._round_updates.get(e, [])
+        if not ups:
+            # no participating clients: the edge just relays the global model
+            self._edge_params[e] = self.global_params
+            self._edge_weight[e] = 0.0
+            self.comm.record(item.link, 2 * self._nfloats, "params")
+            return
+        weights = [len(self.client_data[c][1]) for c, _ in ups]
+        ep = aggregate_params([p for _, p in ups], weights)
+        # κ2 > 1: the remaining edge rounds iterate locally under this edge.
+        # Known simulator approximation: this extra client compute/comm is
+        # billed to the edge's "aggregate" item (interior-tier pricing, edge
+        # uplink), not to the clients' items — exact for the κ2=1 default
+        # every registered variant uses.
+        for _ in range(self.kappa2 - 1):
+            ups = [(c, self._trained_params(c, ep)) for c, _ in ups]
+            for c, _ in ups:
+                self.comm.record(self.link_of(c), 2 * self._nfloats, "params")
+            ep = aggregate_params([p for _, p in ups], weights)
+        self._edge_params[e] = ep
+        self._edge_weight[e] = float(sum(weights))
+        # edge <-> cloud parameter exchange
+        self.comm.record(item.link, 2 * self._nfloats, "params")
+
+    def end_round(self, round: int) -> None:
+        """Cloud aggregation barrier: only edges whose subtree actually
+        trained this round carry weight, so dropout changes the aggregate."""
+        edges = [e for e in self.tree.children[self.tree.root]
+                 if self._edge_weight.get(e, 0.0) > 0.0]
+        if not edges:
+            return  # total outage: the global model is unchanged
         agg = aggregate_params(
-            [edge_params[e] for e in self.tree.children[self.tree.root]], ws
+            [self._edge_params[e] for e in edges],
+            [self._edge_weight[e] for e in edges],
         )
-        for _ in self.tree.children[self.tree.root]:
-            self.comm.record("edge-cloud", 2 * self._nfloats, "params")
         if self.momentum:
             if self._momentum_buf is None:
                 self._momentum_buf = jax.tree.map(jnp.zeros_like, agg)
@@ -201,3 +264,31 @@ class FlatFedAvg(HierarchicalFedAvg):
     def __init__(self, cfg: FLConfig, client_data, *, seed: int = 0):
         tree = Tree.three_tier(1, cfg.num_clients)
         super().__init__(cfg, tree, client_data, seed=seed)
+
+
+@register_algorithm("hierfavg")
+def _hierfavg(cfg, tree, client_data, auto):
+    return HierarchicalFedAvg(cfg, tree, client_data, seed=cfg.seed)
+
+
+@register_algorithm("hiermo")
+def _hiermo(cfg, tree, client_data, auto):
+    return HierarchicalFedAvg(cfg, tree, client_data, momentum=0.9,
+                              seed=cfg.seed)
+
+
+@register_algorithm("hierqsgd")
+def _hierqsgd(cfg, tree, client_data, auto):
+    return HierarchicalFedAvg(cfg, tree, client_data, quantize=True,
+                              seed=cfg.seed)
+
+
+@register_algorithm("demlearn")
+def _demlearn(cfg, tree, client_data, auto):
+    return HierarchicalFedAvg(cfg, tree, client_data, self_organize=True,
+                              seed=cfg.seed)
+
+
+@register_algorithm("fedavg")
+def _fedavg(cfg, tree, client_data, auto):
+    return FlatFedAvg(cfg, client_data, seed=cfg.seed)

@@ -12,23 +12,18 @@ from __future__ import annotations
 
 import time
 import warnings
+from collections import OrderedDict
 from dataclasses import dataclass, field
 
 import jax
-import numpy as np
 
 from repro.configs.base import FLConfig
-from repro.core.fedeec import FedEEC
 from repro.core.topology import Tree
 from repro.data.partition import dirichlet_partition
 from repro.data.synthetic import make_dataset
-from repro.fl.baselines import FlatFedAvg, HierarchicalFedAvg
+from repro.fl.api import create_algorithm, list_algorithms  # noqa: F401  (re-export)
 from repro.fl.metrics import accuracy
 from repro.models.autoencoder import pretrain_autoencoder
-
-ALGORITHMS = (
-    "fedeec", "fedagg", "hierfavg", "hiermo", "hierqsgd", "demlearn", "fedavg",
-)
 
 
 @dataclass
@@ -58,21 +53,29 @@ class RunResult:
         return list(zip(self.sim_times, self.acc_curve))
 
 
-_AUTO_CACHE: dict = {}
+# LRU of pre-trained autoencoders: parameter sweeps cycle through many
+# (dataset, image, embed_dim, seed) combos; keep only the hottest few alive
+_AUTO_CACHE: OrderedDict = OrderedDict()
+_AUTO_CACHE_MAX = 4
 
 
 def _pretrained_auto(cfg: FLConfig, x_open):
     """The frozen autoencoder depends only on the open split — cache it
     per (dataset, image, embed_dim, seed) within the process."""
     key = (cfg.dataset, cfg.image_size, cfg.embed_dim, cfg.seed)
-    if key not in _AUTO_CACHE:
-        _AUTO_CACHE[key] = pretrain_autoencoder(
-            jax.random.PRNGKey(cfg.seed + 7),
-            x_open,
-            image=cfg.image_size,
-            embed_dim=cfg.embed_dim,
-        )
-    return _AUTO_CACHE[key]
+    if key in _AUTO_CACHE:
+        _AUTO_CACHE.move_to_end(key)
+        return _AUTO_CACHE[key]
+    auto = pretrain_autoencoder(
+        jax.random.PRNGKey(cfg.seed + 7),
+        x_open,
+        image=cfg.image_size,
+        embed_dim=cfg.embed_dim,
+    )
+    _AUTO_CACHE[key] = auto
+    while len(_AUTO_CACHE) > _AUTO_CACHE_MAX:
+        _AUTO_CACHE.popitem(last=False)
+    return auto
 
 
 def build_problem(cfg: FLConfig):
@@ -98,22 +101,17 @@ def build_problem(cfg: FLConfig):
 
 
 def make_trainer(algorithm: str, cfg: FLConfig, tree, client_data, auto):
-    a = algorithm.lower()
-    if a == "fedeec":
-        return FedEEC(cfg, tree, client_data, auto, use_skr=True, seed=cfg.seed)
-    if a == "fedagg":
-        return FedEEC(cfg, tree, client_data, auto, use_skr=False, seed=cfg.seed)
-    if a == "hierfavg":
-        return HierarchicalFedAvg(cfg, tree, client_data, seed=cfg.seed)
-    if a == "hiermo":
-        return HierarchicalFedAvg(cfg, tree, client_data, momentum=0.9, seed=cfg.seed)
-    if a == "hierqsgd":
-        return HierarchicalFedAvg(cfg, tree, client_data, quantize=True, seed=cfg.seed)
-    if a == "demlearn":
-        return HierarchicalFedAvg(cfg, tree, client_data, self_organize=True, seed=cfg.seed)
-    if a == "fedavg":
-        return FlatFedAvg(cfg, client_data, seed=cfg.seed)
-    raise KeyError(f"unknown algorithm {algorithm!r}; known: {ALGORITHMS}")
+    """Deprecated: resolve algorithm names through the registry instead.
+
+    Kept as a shim so pre-registry callers (and the old tuple of names)
+    keep working; ``repro.fl.api.create_algorithm`` is the real API.
+    """
+    warnings.warn(
+        "make_trainer is deprecated; use repro.fl.api.create_algorithm "
+        "(or @register_algorithm for new algorithms)",
+        DeprecationWarning, stacklevel=2,
+    )
+    return create_algorithm(algorithm, cfg, tree, client_data, auto)
 
 
 def run_experiment(
@@ -133,7 +131,7 @@ def run_experiment(
     event-driven simulated-network path.
     """
     ds, tree, client_data, auto = build_problem(cfg)
-    trainer = make_trainer(algorithm, cfg, tree, client_data, auto)
+    trainer = create_algorithm(algorithm, cfg, tree, client_data, auto)
     rounds = rounds if rounds is not None else cfg.rounds
     res = RunResult(algorithm, cfg)
     scenario = scenario if scenario is not None else (cfg.scenario or None)
@@ -152,7 +150,7 @@ def run_experiment(
 def _run_plain(trainer, algorithm, ds, res, rounds, eval_every, verbose,
                migration_round):
     for r in range(rounds):
-        if migration_round is not None and r == migration_round and hasattr(trainer, "migrate"):
+        if migration_round is not None and r == migration_round:
             # move one client to a different edge mid-training (§IV-E demo)
             leaf = trainer.tree.leaves[0]
             edges = [v for v in trainer.tree.nodes
@@ -164,8 +162,14 @@ def _run_plain(trainer, algorithm, ds, res, rounds, eval_every, verbose,
                     "migration demo skipped: needs >= 2 edges "
                     f"(topology has {len(edges)})", stacklevel=2,
                 )
-            else:
-                trainer.migrate(leaf, target)
+            elif not trainer.try_migrate(leaf, target):
+                # mirror the sim path: a protocol refusal (Theorem 2)
+                # degrades the demo gracefully instead of crashing the run
+                warnings.warn(
+                    f"migration demo refused by protocol "
+                    f"{trainer.protocol.name!r}: {leaf} -/-> {target}",
+                    stacklevel=2,
+                )
         trainer.train_round()
         if (r + 1) % eval_every == 0 or r == rounds - 1:
             acc = accuracy(trainer.cloud_apply(), trainer.cloud_params(),

@@ -6,7 +6,10 @@ Layers:
   * ``network``   — per-tier link latency/bandwidth models.
   * ``churn``     — node lifecycle (dropout/rejoin), stragglers, mobility.
   * ``scenarios`` — ``ScenarioConfig`` + named scenario registry.
-  * ``engine``    — event-driven FedEEC rounds (pair-level work items).
+  * ``engine``    — event-driven rounds over any ``FLAlgorithm``'s work
+                    items (``repro.fl.api``): BSBODP pairs for FedEEC,
+                    per-client local + per-edge aggregate items for the
+                    parameter-averaging baselines.
   * ``runner``    — CLI: ``python -m repro.sim.runner --scenario ...``.
 """
 from repro.sim.events import Event, EventLog, EventQueue  # noqa: F401

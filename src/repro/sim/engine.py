@@ -1,40 +1,42 @@
-"""Event-driven FedEEC rounds over the discrete-event simulator.
+"""Event-driven FL rounds over the discrete-event simulator.
 
-Each training round becomes a dependency graph of pair-level work items:
-the BSBODP pair (v, parent(v)) may start only after every pair inside
-v's subtree has finished (post-order dependency), and a node serializes
-the pairs it participates in. Pair duration =
+Every trainer is an ``FLAlgorithm`` (``repro.fl.api``): a round is the
+dependency graph of the trainer's ``WorkItem``s. An item keyed on node v
+may start only after every scheduled item whose ``peer`` is v has
+finished — for FedEEC's BSBODP pairs that is the post-order
+subtree-before-parent rule, for the aggregation baselines it makes each
+edge's aggregation wait for its clients' local steps — and a node
+serializes the items it participates in. Item duration =
 
-    compute  : distill steps x base_step_s x (straggler/tier factors)
-    comm     : CommMeter-recorded bytes of the pair / link bandwidth
+    compute  : steps x base_step_s x (straggler/tier factors, per kind)
+    comm     : CommMeter-recorded bytes of the item / link bandwidth
                + link latency        (repro.sim.network)
 
 so a round's simulated length is its critical path through the tree —
 stragglers and slow links stretch it, parallel subtrees don't. Churn
 actions (dropout / rejoin / migrate) fire at round boundaries; offline
-nodes' pairs are skipped and migrations are charged their embedding
-re-registration bytes *and* transfer time.
-
-Trainers without pair decomposition (the parameter-aggregation
-baselines) fall back to round-granularity timing: the whole
-``train_round`` is one work item whose duration comes from the bytes it
-records. Churn is still applied and logged, but offline baselines'
-clients still train — the coarse mode only times, it does not subset.
+nodes' items are skipped (removing baseline clients from the round's
+aggregation weights, not just its clock), and migrations are charged
+their re-registration bytes *and* transfer time. Migration legality is
+decided by the trainer's declared interaction protocol (§IV-E,
+Theorems 1-2): a refused move is logged as ``migrate_refused`` with
+``reason="protocol"`` and the topology is left untouched.
 """
 from __future__ import annotations
 
 from typing import Callable, Optional
 
+from repro.fl.api import FLAlgorithm, MigrationRefused, WorkItem
 from repro.sim.churn import ChurnProcess
 from repro.sim.events import EventLog, EventQueue
-from repro.sim.network import NetworkModel, link_kind
+from repro.sim.network import NetworkModel
 from repro.sim.scenarios import ScenarioConfig
 
 
 class SimEngine:
     def __init__(
         self,
-        trainer,
+        trainer: FLAlgorithm,
         scenario: ScenarioConfig,
         *,
         seed: int = 0,
@@ -57,8 +59,8 @@ class SimEngine:
         self._in_migrate = False
         # log migrations initiated by the trainer itself (e.g. DemLearn's
         # self-organizing re-clustering), not just by the churn process
-        if hasattr(self.tree, "on_migrate"):
-            self.tree.on_migrate(self._external_migration)
+        self.tree.on_migrate(self._external_migration)
+        trainer.on_migrate_refused(self._external_refusal)
         for v in sorted(self.churn.stragglers):
             self.log.note(0.0, "straggle", node=v,
                           slowdown=scenario.straggler_slowdown)
@@ -70,20 +72,22 @@ class SimEngine:
             self.log.note(self.now, "migrate", node=node, target=new,
                           source="trainer")
 
+    def _external_refusal(self, node: str, target: str, reason: str) -> None:
+        if not self._in_migrate:
+            self.log.note(self.now, "migrate_refused", node=node,
+                          target=target, reason=reason, source="trainer")
+
     # -- churn application -------------------------------------------------
 
     def _apply_migration(self, node: str, target: str) -> tuple[float, float]:
         """Re-parent ``node`` and return the simulated transfer time of the
-        embedding re-registration up the new path."""
+        embedding re-registration up the new path. Raises
+        ``MigrationRefused`` when the trainer's protocol forbids the move."""
         self._in_migrate = True
         try:
-            if hasattr(self.trainer, "migrate"):
-                with self.trainer.comm.span() as sp:
-                    self.trainer.migrate(node, target)
-                nbytes = sum(sp.by_link.values())
-            else:
-                self.tree.migrate(node, target)
-                nbytes = 0.0
+            with self.trainer.comm.span() as sp:
+                self.trainer.migrate(node, target)
+            nbytes = sum(sp.by_link.values())
         finally:
             self._in_migrate = False
         return self.net.transfer_s(node, nbytes), nbytes
@@ -101,7 +105,13 @@ class SimEngine:
                     continue
                 if self.tree.parent[act.node] == act.target:
                     continue
-                dur, nbytes = self._apply_migration(act.node, act.target)
+                try:
+                    dur, nbytes = self._apply_migration(act.node, act.target)
+                except MigrationRefused:
+                    # Theorem 2: the interaction protocol forbids the move
+                    self.log.note(self.now, "migrate_refused", node=act.node,
+                                  target=act.target, reason="protocol")
+                    continue
                 busy[act.node] = max(busy.get(act.node, 0.0), self.now + dur)
                 self.log.note(self.now, "migrate", node=act.node,
                               target=act.target, bytes=nbytes,
@@ -113,65 +123,79 @@ class SimEngine:
                 self.log.note(self.now, "rejoin", node=act.node)
         return busy
 
-    # -- pair-level round --------------------------------------------------
+    # -- work-item round ---------------------------------------------------
 
-    def _pair_compute_s(self, child: str, parent: str) -> float:
-        steps = 1
-        if hasattr(self.trainer, "pair_steps"):
-            steps = self.trainer.pair_steps(child, parent)
+    def _item_compute_s(self, item: WorkItem) -> float:
         sc = self.sc
-        f_child = self.churn.compute_factor(child)
-        f_parent = self.churn.compute_factor(parent) / sc.tier_speedup
-        # both directions of BSBODP run `steps` distillation steps
-        return steps * sc.base_step_s * (f_child + f_parent)
+        if item.kind == "pair":
+            # both directions of BSBODP run `steps` distillation steps
+            f_child = self.churn.compute_factor(item.node)
+            f_parent = self.churn.compute_factor(item.peer) / sc.tier_speedup
+            return item.steps * sc.base_step_s * (f_child + f_parent)
+        if item.kind == "local":
+            return item.steps * sc.base_step_s * self.churn.compute_factor(item.node)
+        # "aggregate" runs on an interior tier: fast, step-count cheap
+        return item.steps * sc.base_step_s / sc.tier_speedup
 
-    def _run_round_pairs(self, r: int, busy: dict[str, float]) -> None:
+    def _run_round_items(self, r: int, busy: dict[str, float]) -> None:
+        """Schedule the trainer's work items through their dependency
+        graph; the round ends when the critical path drains."""
         tree, q = self.tree, self.queue
         t0 = self.now
         online = lambda v: self.churn.is_online(v, t0)
 
-        pairs: list[tuple[str, str]] = []
-        for v in tree.post_order():
-            if v == tree.root:
-                continue
-            p = tree.parent[v]
-            if online(v) and online(p):
-                pairs.append((v, p))
+        self.trainer.begin_round(r)
+        items: list[WorkItem] = []
+        for it in self.trainer.work_items(r, online):
+            if online(it.node) and (not it.peer or online(it.peer)):
+                items.append(it)
             else:
-                self.log.note(t0, "pair_skip", node=v, target=p,
-                              offline=(v if not online(v) else p))
-        if not pairs:
-            # every pair skipped (e.g. all edges down): idle until the
+                self.log.note(t0, "pair_skip", node=it.node, target=it.peer,
+                              offline=(it.node if not online(it.node)
+                                       else it.peer))
+        if not items:
+            # every item skipped (e.g. all edges down): idle until the
             # earliest offline window expires so nodes can rejoin — without
             # this the clock freezes and the outage never ends
             pending = [t for t in self.churn.offline_until.values()
                        if t > t0]
             self.now = min(pending) if pending else t0 + self.sc.base_step_s
             self.log.note(self.now, "idle", reason="no schedulable pairs")
+            self.trainer.end_round(r)
             return
 
-        scheduled = {v for v, _ in pairs}
-        # pair (v, p) waits for every scheduled pair (c, v), c ∈ children(v)
+        scheduled: dict[str, WorkItem] = {}
+        for it in items:
+            if it.node in scheduled:
+                # the dependency graph is keyed by node: one item per node
+                # per round (an async policy wanting more must split rounds)
+                raise ValueError(
+                    f"duplicate work item for node {it.node!r} in round {r}; "
+                    "the scheduler runs one item per node per round"
+                )
+            scheduled[it.node] = it
+        # the item on v waits for every scheduled item feeding v (peer == v)
         deps = {
-            v: sum(1 for c in tree.children[v] if c in scheduled)
-            for v, _ in pairs
+            it.node: sum(1 for c in tree.children[it.node] if c in scheduled)
+            for it in items
         }
         ready = dict(busy)  # node -> time it becomes free
 
-        def schedule(v: str, p: str, enabled_at: float) -> None:
+        def schedule(item: WorkItem, enabled_at: float) -> None:
+            v, p = item.node, item.peer
             start = max(enabled_at, ready.get(v, t0), ready.get(p, t0), t0)
             with self.trainer.comm.span() as sp:
-                self.trainer.bsbodp_pair(v, p)
+                self.trainer.execute(item)
             nbytes = sum(sp.by_link.values())
-            dur = self._pair_compute_s(v, p) + self.net.transfer_s(v, nbytes)
+            dur = self._item_compute_s(item) + self.net.transfer_s(v, nbytes)
             ready[v] = ready[p] = start + dur
             q.push(start, "pair_start", v, p)
             q.push(start + dur, "pair_done", v, p,
                    bytes=nbytes, dur=round(dur, 6))
 
-        for v, p in pairs:
-            if deps[v] == 0:
-                schedule(v, p, t0)
+        for it in items:
+            if deps[it.node] == 0:
+                schedule(it, t0)
 
         while q:
             ev = q.pop()
@@ -180,32 +204,13 @@ class SimEngine:
             if ev.kind != "pair_done":
                 continue
             parent = ev.target
-            if parent == tree.root or parent not in scheduled:
+            if parent not in scheduled:
                 continue
             deps[parent] -= 1
             if deps[parent] == 0:
-                schedule(parent, tree.parent[parent], ev.time)
+                schedule(scheduled[parent], ev.time)
 
-    def _run_round_coarse(self, r: int, busy: dict[str, float]) -> None:
-        """Round-granularity fallback for non-pair trainers."""
-        t0 = max([self.now] + list(busy.values()))
-        with self.trainer.comm.span() as sp:
-            self.trainer.train_round()
-        comm_s = sum(
-            self.net.specs[k].latency_s
-            + v / self.net.specs[k].bandwidth_Bps
-            for k, v in sp.by_link.items()
-        )
-        slow = max(
-            [self.churn.compute_factor(v) for v in self.churn.devices] or [1.0]
-        )
-        comp_s = self.sc.base_step_s * slow
-        ev = self.queue.push(t0 + comm_s + comp_s, "round_work",
-                             bytes=sum(sp.by_link.values()),
-                             dur=round(comm_s + comp_s, 6))
-        self.queue.pop()
-        self.now = ev.time
-        self.log.append(ev)
+        self.trainer.end_round(r)
 
     # -- driver ------------------------------------------------------------
 
@@ -216,14 +221,14 @@ class SimEngine:
         eval_fn: Optional[Callable[[], float]] = None,
         eval_every: int = 1,
     ) -> EventLog:
-        pairwise = hasattr(self.trainer, "bsbodp_pair")
         for r in range(rounds):
             self.log.note(self.now, "round_start", round=r)
             busy = self._round_churn(r)
-            if pairwise:
-                self._run_round_pairs(r, busy)
-            else:
-                self._run_round_coarse(r, busy)
+            self.trainer.set_participation(
+                v for v in self.churn.devices
+                if self.churn.is_online(v, self.now)
+            )
+            self._run_round_items(r, busy)
             self.log.note(self.now, "round_end", round=r)
             if eval_fn and ((r + 1) % eval_every == 0 or r == rounds - 1):
                 acc = eval_fn()

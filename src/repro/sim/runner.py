@@ -98,7 +98,13 @@ def main(argv=None) -> int:
             print(f"error: unknown scenario {name!r}; known: "
                   f"{', '.join(list_scenarios())}", file=sys.stderr)
             return 2
+    from repro.fl.api import list_algorithms
     from repro.fl.engine import run_experiment
+
+    if args.algorithm.lower() not in list_algorithms():
+        print(f"error: unknown algorithm {args.algorithm!r}; known: "
+              f"{', '.join(list_algorithms())}", file=sys.stderr)
+        return 2
 
     rc = 0
     for name in names:

@@ -135,6 +135,17 @@ register_scenario(ScenarioConfig(
 ))
 
 register_scenario(ScenarioConfig(
+    "flash_crowd",
+    "Stadium-event surge: a mass handover wave at round 1 while the "
+    "access links are congested and ends intermittently drop.",
+    mass_migration_round=1,
+    mass_migration_frac=0.5,
+    dropout_prob=0.10,
+    dropout_s=(2.0, 8.0),
+    end_edge=LinkSpec(latency_s=0.040, bandwidth_Bps=4 * 1e6 / 8, spread=0.4),
+))
+
+register_scenario(ScenarioConfig(
     "trace_replay",
     "Scripted churn from a trace: deterministic dropouts/migrations at "
     "fixed rounds (stand-in for real mobility traces).",

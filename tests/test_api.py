@@ -1,0 +1,294 @@
+"""FLAlgorithm work-item API: registry parity across both execution
+paths, protocol-gated migration (Theorems 1-2), participation masks,
+work-item decomposition, and the bounded autoencoder cache."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FLConfig
+from repro.core.protocols import BSBODP_SKR, PARAM_AVG, PARTIAL_TRAIN
+from repro.fl.api import (
+    ALGORITHM_REGISTRY,
+    FLAlgorithm,
+    MigrationRefused,
+    WorkItem,
+    create_algorithm,
+    list_algorithms,
+    register_algorithm,
+)
+from repro.fl.engine import build_problem, make_trainer, run_experiment
+from repro.sim.scenarios import ScenarioConfig, TraceEntry
+
+
+def _cfg(**kw):
+    base = dict(num_clients=4, num_edges=2, samples_per_client=16,
+                test_samples=64, image_size=8, embed_dim=16,
+                edge_model="cnn2", cloud_model="cnn2")
+    base.update(kw)
+    return FLConfig(**base)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+
+def test_registry_has_all_seven_algorithms():
+    assert list_algorithms() == [
+        "demlearn", "fedagg", "fedavg", "fedeec", "hierfavg", "hiermo",
+        "hierqsgd",
+    ]
+
+
+def test_unknown_algorithm_raises_with_known_names():
+    cfg = _cfg()
+    with pytest.raises(KeyError, match="fedeec"):
+        create_algorithm("nope", cfg, None, None, None)
+
+
+def test_duplicate_registration_refused():
+    with pytest.raises(ValueError, match="duplicate"):
+        register_algorithm("fedeec")(lambda *a: None)
+
+
+def test_make_trainer_shim_resolves_old_names_and_warns():
+    cfg = _cfg()
+    ds, tree, client_data, auto = build_problem(cfg)
+    with pytest.warns(DeprecationWarning, match="create_algorithm"):
+        tr = make_trainer("fedeec", cfg, tree, client_data, auto)
+    assert isinstance(tr, FLAlgorithm)
+    assert tr.protocol is BSBODP_SKR
+    # every pre-registry name still resolves
+    for name in list_algorithms():
+        with pytest.warns(DeprecationWarning):
+            tr = make_trainer(name, _cfg(), tree, client_data, auto)
+        assert isinstance(tr, FLAlgorithm), name
+
+
+# ---------------------------------------------------------------------------
+# registry parity: every algorithm runs on both execution paths
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("alg", list_algorithms())
+def test_every_algorithm_runs_both_paths_deterministically(alg):
+    cfg = _cfg(scenario="trace_replay")
+    plain = run_experiment(alg, _cfg(), rounds=2)
+    assert len(plain.acc_curve) == 2
+    assert 0.0 <= plain.best_acc <= 1.0
+    assert sum(plain.comm_bytes.values()) > 0
+
+    sim1 = run_experiment(alg, cfg, rounds=2)
+    sim2 = run_experiment(alg, cfg, rounds=2)
+    assert sim1.event_signature == sim2.event_signature, alg
+    assert sim1.event_log == sim2.event_log
+    # the scenario path schedules real per-node work items for everyone
+    assert sim1.event_counts.get("pair_start", 0) > 0
+    assert sim1.event_counts.get("round_end") == 2
+
+
+def test_parametrize_saw_the_registry():
+    # the parametrize above is built at import time; make sure it really
+    # enumerated the fully-loaded registry
+    assert len(ALGORITHM_REGISTRY) == 7
+
+
+# ---------------------------------------------------------------------------
+# work-item decomposition
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def problem():
+    cfg = _cfg()
+    return (cfg,) + build_problem(cfg)
+
+
+def test_fedeec_work_items_are_postorder_pairs(problem):
+    cfg, ds, tree, client_data, auto = problem
+    tr = create_algorithm("fedeec", cfg, tree, client_data, auto)
+    items = tr.work_items(0, lambda v: True)
+    assert all(it.kind == "pair" for it in items)
+    assert [(it.node, it.peer) for it in items] == tr.round_pairs()
+    by_node = {it.node: it for it in items}
+    assert by_node["client0"].link == "end-edge"
+    assert by_node["edge0"].link == "edge-cloud"
+    assert all(it.steps > 0 for it in items)
+
+
+def test_hierfavg_work_items_decompose_per_client(problem):
+    cfg, ds, tree, client_data, auto = problem
+    tr = create_algorithm("hierfavg", cfg, tree, client_data, auto)
+    items = tr.work_items(0, lambda v: True)
+    kinds = [it.kind for it in items]
+    assert kinds.count("local") == cfg.num_clients
+    assert kinds.count("aggregate") == cfg.num_edges
+    # each edge's aggregate item comes after its clients' local items
+    for e in tree.children[tree.root]:
+        agg_at = next(i for i, it in enumerate(items)
+                      if it.kind == "aggregate" and it.node == e)
+        for i, it in enumerate(items):
+            if it.kind == "local" and it.peer == e:
+                assert i < agg_at
+
+
+# ---------------------------------------------------------------------------
+# protocol-gated migration (§IV-E, Theorems 1-2)
+# ---------------------------------------------------------------------------
+
+
+def test_equivalence_protocols_always_allow_migration(problem):
+    cfg, ds, tree, client_data, auto = problem
+    tr = create_algorithm("hierfavg", cfg, tree, client_data, auto)
+    assert tr.protocol is PARAM_AVG
+    assert tr.try_migrate("client0", "edge1")
+    assert tr.tree.parent["client0"] == "edge1"
+    tr.migrate("client0", "edge0")  # move back, no refusal
+
+
+def test_partial_order_protocol_refuses_illegal_move():
+    cfg = _cfg()
+    ds, tree, client_data, auto = build_problem(cfg)
+    tr = create_algorithm("fedeec", cfg, tree, client_data, auto)
+    # instance-level override: pretend FedEEC ran under partial training.
+    # client models (cnn1) are not sub-models of the edge's cnn2 (Thm 2).
+    tr.protocol = PARTIAL_TRAIN
+    refusals = []
+    tr.on_migrate_refused(lambda n, t, why: refusals.append((n, t, why)))
+    old_parent = tr.tree.parent["client0"]
+    with pytest.raises(MigrationRefused):
+        tr.migrate("client0", "edge1")
+    assert tr.tree.parent["client0"] == old_parent  # topology untouched
+    assert refusals == [("client0", "edge1", "protocol")]
+    assert tr.try_migrate("client0", "edge1") is False
+
+
+def test_partial_order_without_model_params_refuses_not_crashes():
+    """A custom algorithm that never overrides _model_params must get a
+    clean refusal under a partial-order protocol (the relation is
+    unverifiable), not an AttributeError inside the relation."""
+    from repro.core.topology import Tree
+
+    class Bare(FLAlgorithm):
+        protocol = PARTIAL_TRAIN
+
+        def work_items(self, round, online):
+            return []
+
+        def execute(self, item):
+            pass
+
+        def cloud_params(self):
+            return None
+
+        def cloud_apply(self):
+            return None
+
+    tr = Bare(_cfg(), Tree.three_tier(2, 4))
+    assert tr.try_migrate("client0", "edge1") is False
+    assert tr.tree.parent["client0"] == "edge0"
+
+
+def test_sim_logs_protocol_refusal_for_churn_and_trainer_moves():
+    from repro.sim.engine import SimEngine
+
+    cfg = _cfg()
+    ds, tree, client_data, auto = build_problem(cfg)
+    tr = create_algorithm("fedeec", cfg, tree, client_data, auto)
+    tr.protocol = PARTIAL_TRAIN
+    sc = ScenarioConfig(
+        "forced_move",
+        trace=(TraceEntry(0, "migrate", "client0", target="edge1"),),
+    )
+    eng = SimEngine(tr, sc, seed=0)
+    eng.run(1)
+    refused = [e for e in eng.log.entries if e["kind"] == "migrate_refused"]
+    assert refused and refused[0]["reason"] == "protocol"
+    assert refused[0]["node"] == "client0"
+    assert tr.tree.parent["client0"] == "edge0"
+    # trainer-driven refusal (e.g. self-organizing re-clustering) is
+    # observed through the refuse hook and logged with its source
+    assert tr.try_migrate("client2", "edge1") is False
+    trainer_refused = [e for e in eng.log.entries
+                       if e["kind"] == "migrate_refused"
+                       and e.get("source") == "trainer"]
+    assert trainer_refused and trainer_refused[0]["node"] == "client2"
+
+
+# ---------------------------------------------------------------------------
+# participation mask
+# ---------------------------------------------------------------------------
+
+
+def _param_dist(a, b):
+    return sum(
+        float(jnp.sum(jnp.abs(x - y)))
+        for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b))
+    )
+
+
+def test_participation_mask_changes_hierfavg_aggregate():
+    cfg = _cfg()
+    ds, tree, cd, auto = build_problem(cfg)
+    full = create_algorithm("hierfavg", cfg, tree, cd, auto)
+    ds2, tree2, cd2, auto2 = build_problem(cfg)
+    masked = create_algorithm("hierfavg", cfg, tree2, cd2, auto2)
+
+    masked.set_participation({"client0", "client2", "client3"})
+    assert masked.participates("client0")
+    assert not masked.participates("client1")
+    assert masked.participates("edge0")  # interior nodes always participate
+
+    full.train_round()
+    masked.train_round()
+    # excluding client1 from the weighted average changes the cloud model
+    assert _param_dist(full.global_params, masked.global_params) > 0
+    # client1 never trained: its optimizer slot state is untouched
+    assert int(masked.opt["client1"]["step"]) == 0
+    assert int(masked.opt["client0"]["step"]) > 0
+
+    masked.set_participation(None)
+    assert masked.participates("client1")
+
+
+def test_fedeec_participation_skips_pairs():
+    cfg = _cfg()
+    ds, tree, cd, auto = build_problem(cfg)
+    tr = create_algorithm("fedeec", cfg, tree, cd, auto)
+    executed = []
+    orig = tr.execute
+    tr.execute = lambda item: (executed.append(item.node), orig(item))
+    tr.set_participation({"client0", "client2", "client3"})
+    tr.train_round()
+    assert "client1" not in executed
+    assert "edge0" in executed  # interior pairs still run
+
+
+# ---------------------------------------------------------------------------
+# autoencoder LRU cache
+# ---------------------------------------------------------------------------
+
+
+def test_auto_cache_is_lru_bounded(monkeypatch):
+    from repro.fl import engine as eng
+
+    eng._AUTO_CACHE.clear()
+    builds = []
+
+    def fake_pretrain(key, x_open, *, image, embed_dim):
+        builds.append((image, embed_dim))
+        return {"id": len(builds)}
+
+    monkeypatch.setattr(eng, "pretrain_autoencoder", fake_pretrain)
+    cfgs = [_cfg(seed=s) for s in range(6)]
+    for c in cfgs:
+        eng._pretrained_auto(c, None)
+    assert len(builds) == 6
+    assert len(eng._AUTO_CACHE) == eng._AUTO_CACHE_MAX == 4
+    # oldest entries evicted; hottest survive
+    assert eng._pretrained_auto(cfgs[5], None)["id"] == 6  # hit, no rebuild
+    assert len(builds) == 6
+    eng._pretrained_auto(cfgs[0], None)  # evicted -> rebuilt
+    assert len(builds) == 7
+    eng._AUTO_CACHE.clear()

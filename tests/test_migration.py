@@ -19,11 +19,12 @@ def _cfg(**kw):
 
 @pytest.fixture(scope="module")
 def fedeec():
-    from repro.fl.engine import build_problem, make_trainer
+    from repro.fl.api import create_algorithm
+    from repro.fl.engine import build_problem
 
     cfg = _cfg()
     ds, tree, client_data, auto = build_problem(cfg)
-    return make_trainer("fedeec", cfg, tree, client_data, auto)
+    return create_algorithm("fedeec", cfg, tree, client_data, auto)
 
 
 def _store_sizes(tr):
@@ -66,11 +67,12 @@ def test_repeated_migrations_keep_stores_consistent(fedeec):
 
 
 def test_migrating_all_clients_empties_edge_without_crash():
-    from repro.fl.engine import build_problem, make_trainer
+    from repro.fl.api import create_algorithm
+    from repro.fl.engine import build_problem
 
     cfg = _cfg()
     ds, tree, client_data, auto = build_problem(cfg)
-    tr = make_trainer("fedeec", cfg, tree, client_data, auto)
+    tr = create_algorithm("fedeec", cfg, tree, client_data, auto)
     movers = [c for c in list(tr.tree.children["edge0"])]
     for c in movers:
         tr.migrate(c, "edge1")

@@ -262,11 +262,54 @@ def test_total_outage_idles_clock_until_rejoin():
     assert res.sim_wall_s >= 5.0  # clock moved past the first outage window
 
 
-def test_coarse_mode_for_baselines():
+def test_baselines_schedule_per_client_work_items():
+    """Baselines run through the same work-item scheduler as FedEEC: one
+    "local" item per client plus one "aggregate" item per edge, visible
+    as pair_start/pair_done events naming individual clients."""
     from repro.fl.engine import run_experiment
 
     cfg = _small_cfg(scenario="stable")
     res = run_experiment("hierfavg", cfg, rounds=2)
-    assert res.event_counts.get("round_work") == 2
+    # (4 clients + 2 edges) x 2 rounds
+    assert res.event_counts.get("pair_start") == 12
+    assert res.event_counts.get("pair_done") == 12
+    started = {e["node"] for e in res.event_log if e["kind"] == "pair_start"}
+    assert {"client0", "client1", "client2", "client3"} <= started
     assert res.sim_wall_s > 0
     assert len(res.sim_times) == 2
+
+
+def test_baseline_dropout_excludes_clients_from_aggregate():
+    """An offline client's "local" item is skipped, so it contributes
+    neither weight nor parameters to the round's aggregation."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.fl.api import create_algorithm
+    from repro.fl.engine import build_problem
+    from repro.sim.engine import SimEngine
+
+    cfg = _small_cfg()
+    ds, tree, cd, auto = build_problem(cfg)
+    t_full = create_algorithm("hierfavg", cfg, tree, cd, auto)
+    SimEngine(t_full, get_scenario("stable"), seed=cfg.seed).run(1)
+
+    sc = ScenarioConfig(
+        "drop_one",
+        trace=(TraceEntry(0, "dropout", "client1", duration_s=1e9),),
+    )
+    ds2, tree2, cd2, auto2 = build_problem(cfg)
+    t_drop = create_algorithm("hierfavg", cfg, tree2, cd2, auto2)
+    log = SimEngine(t_drop, sc, seed=cfg.seed).run(1)
+
+    skips = [e for e in log.entries if e["kind"] == "pair_skip"]
+    assert any(e["node"] == "client1" for e in skips)
+    started = {e["node"] for e in log.entries if e["kind"] == "pair_start"}
+    assert "client1" not in started
+    # removing a client from the weighted average changes the cloud model
+    dist = sum(
+        float(jnp.sum(jnp.abs(a - b)))
+        for a, b in zip(jax.tree.leaves(t_full.global_params),
+                        jax.tree.leaves(t_drop.global_params))
+    )
+    assert dist > 0

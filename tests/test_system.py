@@ -5,7 +5,8 @@ import numpy as np
 import pytest
 
 from repro.configs.base import FLConfig
-from repro.fl.engine import build_problem, make_trainer, run_experiment
+from repro.fl.api import create_algorithm
+from repro.fl.engine import build_problem, run_experiment
 
 SMALL = FLConfig(
     num_clients=4, num_edges=2, samples_per_client=24, rounds=2,
@@ -24,7 +25,7 @@ def test_fedeec_runs_and_improves_over_chance():
 def test_tier_scaled_models():
     """FedEEC deploys larger models on higher tiers (the paper's premise)."""
     _, tree, client_data, auto = build_problem(SMALL)
-    t = make_trainer("fedeec", SMALL, tree, client_data, auto)
+    t = create_algorithm("fedeec", SMALL, tree, client_data, auto)
     size = lambda p: sum(int(np.prod(x.shape)) for x in jax.tree.leaves(p))
     end = size(t.params["client0"])
     edge = size(t.params["edge0"])
@@ -61,9 +62,9 @@ def test_comm_accounting_grows_with_rounds():
 def test_skr_changes_transferred_knowledge():
     """FedEEC (SKR on) and FedAgg (SKR off) diverge in cloud parameters."""
     _, tree, client_data, auto = build_problem(SMALL)
-    t1 = make_trainer("fedeec", SMALL, tree, client_data, auto)
+    t1 = create_algorithm("fedeec", SMALL, tree, client_data, auto)
     _, tree2, client_data2, auto2 = build_problem(SMALL)
-    t2 = make_trainer("fedagg", SMALL, tree2, client_data2, auto2)
+    t2 = create_algorithm("fedagg", SMALL, tree2, client_data2, auto2)
     for _ in range(2):
         t1.train_round()
         t2.train_round()
