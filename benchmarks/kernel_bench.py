@@ -1,15 +1,37 @@
-"""Kernel microbenchmarks: wall time of the jnp oracle path on CPU (the
-Pallas kernels themselves target TPU; interpret-mode timings are not
-hardware-meaningful, so the CSV reports the oracle path + the analytic
-VMEM/FLOP characteristics of each kernel's block schedule)."""
+"""Kernel microbenchmarks + the batched-dispatch regression file.
+
+Single-kernel rows time the jnp oracle path on CPU (the Pallas kernels
+themselves target TPU; interpret-mode timings are not hardware-meaningful)
+and report the analytic FLOP throughput of each kernel's working shape.
+
+``collect()`` additionally measures batched-vs-serial pair dispatch for
+``distill_loss`` and ``skr_rectify`` — the oracle path on CPU, the real
+compiled Pallas path when a TPU backend is present — plus the
+pair-coalescing counts of a FedEEC ``flash_crowd`` simulation, and writes
+everything to the tracked ``BENCH_kernels.json`` at the repo root.
+``check()`` re-verifies the deterministic parts (file structure, numeric
+parity of the batched kernels, coalescing counts) WITHOUT comparing wall
+clock — that's the ``benchmarks.run --check-kernels`` CI gate.
+"""
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
+from repro.kernels.pallas_compat import has_tpu_backend
+
+BENCH_PATH = os.path.normpath(
+    os.path.join(os.path.dirname(__file__), "..", "BENCH_kernels.json")
+)
+
+# tolerance for batched-Pallas vs per-slice-oracle parity (fp32 flash
+# softmax over a few hundred vocab columns)
+PARITY_TOL = {"distill_fwd": 1e-3, "distill_grad": 1e-3, "skr": 1e-5}
 
 
 def _time(fn, *args, iters=5):
@@ -21,28 +43,44 @@ def _time(fn, *args, iters=5):
     return (time.time() - t0) / iters * 1e6
 
 
+def _time_thunk(fn, iters=3):
+    fn()  # compile
+    t0 = time.time()
+    for _ in range(iters):
+        r = fn()
+    jax.block_until_ready(r)
+    return (time.time() - t0) / iters * 1e6
+
+
+# -- single-kernel rows (oracle path) ----------------------------------------
+
+
 def bench():
     key = jax.random.PRNGKey(0)
     rows = []
 
-    # distill loss oracle: 4096 rows x 8192 vocab
+    # distill loss oracle: 2048 rows x 8192 vocab
     N, V = 2048, 8192
     z = jax.random.normal(key, (N, V))
     tl = jax.nn.log_softmax(jax.random.normal(jax.random.fold_in(key, 1), (N, V)), -1)
     y = jax.random.randint(jax.random.fold_in(key, 2), (N,), 0, V)
     f = jax.jit(lambda z, tl, y: ref.distill_loss_ref(z, y, tl, 1.5).sum())
     us = _time(f, z, tl, y)
-    flops = 8 * N * V  # ~ops per fused pass
-    rows.append(("kernel,distill_loss_ref", us, f"rows={N} vocab={V} ~{flops/us/1e3:.1f}GFLOPs"))
+    flops = 8 * N * V  # exp/log/mul/add per fused CE+KL pass
+    rows.append(("kernel,distill_loss_ref", us,
+                 f"rows={N} vocab={V} ~{flops/us/1e3:.1f}GFLOPs"))
 
     # skr rectify oracle
-    probs = jax.nn.softmax(z[:512, :1024], -1)
-    labels = y[:512] % 1024
-    qbar = jnp.full((1024,), 0.5)
-    counts = jnp.ones((1024,), jnp.int32)
+    Ns, C = 512, 1024
+    probs = jax.nn.softmax(z[:Ns, :C], -1)
+    labels = y[:Ns] % C
+    qbar = jnp.full((C,), 0.5)
+    counts = jnp.ones((C,), jnp.int32)
     f2 = jax.jit(lambda p, l, q, c: ref.skr_rectify_ref(p, l, q, c))
     us = _time(f2, probs, labels, qbar, counts)
-    rows.append(("kernel,skr_rectify_ref", us, "rows=512 classes=1024"))
+    flops = 4 * Ns * C  # scale/select/compare per element
+    rows.append(("kernel,skr_rectify_ref", us,
+                 f"rows={Ns} classes={C} ~{flops/us/1e3:.1f}GFLOPs"))
 
     # flash attention oracle
     B, S, Nh, K, H = 2, 512, 8, 2, 64
@@ -51,7 +89,9 @@ def bench():
     v = jax.random.normal(jax.random.fold_in(key, 4), (B, S, K, H)) * 0.3
     f3 = jax.jit(lambda q, k, v: ref.flash_attention_ref(q, k, v))
     us = _time(f3, q, k, v)
-    rows.append(("kernel,flash_attention_ref", us, f"B={B} S={S} H={Nh}x{H}"))
+    flops = 4 * B * Nh * S * S * H  # QK^T + PV matmuls (full rectangle)
+    rows.append(("kernel,flash_attention_ref", us,
+                 f"B={B} S={S} H={Nh}x{H} ~{flops/us/1e3:.1f}GFLOPs"))
 
     # rwkv6 scan oracle
     B, T, Hh, hd = 2, 256, 4, 32
@@ -64,5 +104,220 @@ def bench():
     s0 = jnp.zeros((B, Hh, hd, hd))
     f4 = jax.jit(lambda *a: ref.rwkv6_scan_ref(*a)[0])
     us = _time(f4, r, kk, vv, w, u, s0)
-    rows.append(("kernel,rwkv6_scan_ref", us, f"B={B} T={T} H={Hh}x{hd}"))
+    flops = 6 * B * T * Hh * hd * hd  # kv outer + state decay + readout
+    rows.append(("kernel,rwkv6_scan_ref", us,
+                 f"B={B} T={T} H={Hh}x{hd} ~{flops/us/1e3:.1f}GFLOPs"))
     return rows
+
+
+# -- batched vs serial pair dispatch -----------------------------------------
+
+
+def _distill_inputs(key, B, N, V):
+    z = jax.random.normal(key, (B, N, V)) * 2.0
+    tl = jax.nn.log_softmax(
+        jax.random.normal(jax.random.fold_in(key, 1), (B, N, V)), -1
+    )
+    y = jax.random.randint(jax.random.fold_in(key, 2), (B, N), 0, V)
+    return z, tl, y
+
+
+def _skr_inputs(key, B, N, C):
+    probs = jax.nn.softmax(
+        jax.random.normal(key, (B, N, C)) * 2.0, -1
+    )
+    labels = jax.random.randint(jax.random.fold_in(key, 3), (B, N), 0, C)
+    qbar = jax.random.uniform(
+        jax.random.fold_in(key, 4), (B, C), minval=0.1, maxval=0.9
+    )
+    counts = jax.random.randint(jax.random.fold_in(key, 5), (B, C), 0, 3)
+    return probs, labels, qbar, counts
+
+
+def batched_vs_serial(iters: int = 3) -> dict:
+    """Wall time of B serial 2-D dispatches vs ONE stacked (B, N, V)
+    dispatch, per kernel. CPU times the oracle path (interpret-mode Pallas
+    is not hardware-meaningful); with a TPU backend the compiled Pallas
+    kernels themselves are timed."""
+    pallas_path = has_tpu_backend()
+    key = jax.random.PRNGKey(7)
+    out: dict = {"path": "pallas" if pallas_path else "oracle"}
+
+    B, N, V = 4, 256, 2048
+    z, tl, y = _distill_inputs(key, B, N, V)
+    if pallas_path:
+        from repro.kernels.distill_loss import distill_loss, distill_loss_batched
+        single = jax.jit(lambda z, t, y: distill_loss(z, t, y, 1.5))
+        batched = jax.jit(lambda z, t, y: distill_loss_batched(z, t, y, 1.5))
+    else:
+        single = jax.jit(lambda z, t, y: ref.distill_loss_ref(z, y, t, 1.5))
+        batched = jax.jit(
+            lambda z, t, y: ref.distill_loss_batched_ref(z, y, t, 1.5)
+        )
+    serial_us = _time_thunk(
+        lambda: [single(z[b], tl[b], y[b]) for b in range(B)], iters
+    )
+    batched_us = _time_thunk(lambda: batched(z, tl, y), iters)
+    out["distill_loss"] = {
+        "B": B, "N": N, "V": V,
+        "serial_us": round(serial_us, 1), "batched_us": round(batched_us, 1),
+        "speedup": round(serial_us / max(batched_us, 1e-9), 2),
+    }
+
+    B, N, C = 4, 256, 1024
+    probs, labels, qbar, counts = _skr_inputs(key, B, N, C)
+    if pallas_path:
+        from repro.kernels.skr_rectify import skr_rectify, skr_rectify_batched
+        s_single = jax.jit(skr_rectify)
+        s_batched = jax.jit(skr_rectify_batched)
+    else:
+        s_single = jax.jit(ref.skr_rectify_ref)
+        s_batched = jax.jit(ref.skr_rectify_batched_ref)
+    serial_us = _time_thunk(
+        lambda: [s_single(probs[b], labels[b], qbar[b], counts[b])
+                 for b in range(B)], iters
+    )
+    batched_us = _time_thunk(
+        lambda: s_batched(probs, labels, qbar, counts), iters
+    )
+    out["skr_rectify"] = {
+        "B": B, "N": N, "C": C,
+        "serial_us": round(serial_us, 1), "batched_us": round(batched_us, 1),
+        "speedup": round(serial_us / max(batched_us, 1e-9), 2),
+    }
+    return out
+
+
+def kernel_parity() -> dict:
+    """Max abs error of the batched Pallas kernels (auto interpret mode)
+    against the per-slice oracle — deterministic, checked by the CI gate."""
+    from repro.kernels.distill_loss import distill_loss_batched
+    from repro.kernels.skr_rectify import skr_rectify_batched
+
+    key = jax.random.PRNGKey(11)
+    B, N, V = 3, 24, 640
+    z, tl, y = _distill_inputs(key, B, N, V)
+    got = distill_loss_batched(z, tl, y, 1.5)
+    want = ref.distill_loss_batched_ref(z, y, tl, 1.5)
+    fwd_err = float(jnp.max(jnp.abs(got - want)))
+    g = jax.grad(lambda zz: distill_loss_batched(zz, tl, y, 1.5).sum())(z)
+    gw = jax.vmap(lambda a, b, c: ref.distill_loss_grad_ref(a, b, c, 1.5))(z, y, tl)
+    grad_err = float(jnp.max(jnp.abs(g - gw)))
+
+    B, N, C = 3, 24, 257
+    probs, labels, qbar, counts = _skr_inputs(key, B, N, C)
+    got = skr_rectify_batched(probs, labels, qbar, counts)
+    want = ref.skr_rectify_batched_ref(probs, labels, qbar, counts)
+    skr_err = float(jnp.max(jnp.abs(got - want)))
+    return {
+        "distill_fwd_max_abs_err": fwd_err,
+        "distill_grad_max_abs_err": grad_err,
+        "skr_max_abs_err": skr_err,
+    }
+
+
+# -- flash_crowd coalescing counts -------------------------------------------
+
+
+def flash_crowd_counts(rounds: int = 2, clients: int = 6, edges: int = 3) -> dict:
+    """Pair-coalescing counters of a FedEEC flash_crowd simulation —
+    deterministic (pure function of scenario + seed), so the CI gate can
+    require them to match the tracked file exactly."""
+    from repro.configs.fedeec_paper import paper_setting
+    from repro.fl.api import create_algorithm
+    from repro.fl.engine import build_problem
+    from repro.sim.engine import SimEngine
+    from repro.sim.scenarios import get_scenario
+
+    cfg = paper_setting(
+        "synth_cifar10", clients, edges, samples_per_client=16,
+        test_samples=64, image_size=8, embed_dim=16,
+        edge_model="cnn2", cloud_model="cnn2",
+    )
+    _, tree, client_data, auto = build_problem(cfg)
+    trainer = create_algorithm("fedeec", cfg, tree, client_data, auto)
+    engine = SimEngine(trainer, get_scenario("flash_crowd"), seed=cfg.seed)
+    engine.run(rounds)
+    stats = engine.dispatch_stats
+    return {
+        "rounds": rounds, "clients": clients, "edges": edges,
+        "serial_pair_items": stats["items"],
+        "dispatches": stats["dispatches"],
+        "batched_dispatches": stats["batched_dispatches"],
+        "batched_items": stats["batched_items"],
+    }
+
+
+# -- tracked file ------------------------------------------------------------
+
+
+def collect() -> dict:
+    return {
+        "backend": jax.default_backend(),
+        "batched_dispatch": batched_vs_serial(),
+        "parity": kernel_parity(),
+        "flash_crowd": flash_crowd_counts(),
+        "single_kernel": [
+            {"name": name, "us": round(us, 1), "derived": derived}
+            for name, us, derived in bench()
+        ],
+    }
+
+
+def write_bench(path: str = BENCH_PATH) -> dict:
+    payload = collect()
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {path}")
+    return payload
+
+
+def check_bench(path: str = BENCH_PATH) -> int:
+    """The --check-kernels gate: structure + parity + coalescing counts.
+    Wall-clock fields are required to EXIST but never compared."""
+    if not os.path.exists(path):
+        print(f"error: no tracked bench at {path}; run --update-kernels first")
+        return 2
+    with open(path) as f:
+        tracked = json.load(f)
+    bad = 0
+
+    for kernel in ("distill_loss", "skr_rectify"):
+        rec = tracked.get("batched_dispatch", {}).get(kernel)
+        if not rec or not all(k in rec for k in ("serial_us", "batched_us")):
+            print(f"STRUCTURE {kernel}: missing batched/serial timings")
+            bad += 1
+
+    parity = kernel_parity()
+    for key, tol_key in (("distill_fwd_max_abs_err", "distill_fwd"),
+                         ("distill_grad_max_abs_err", "distill_grad"),
+                         ("skr_max_abs_err", "skr")):
+        err, tol = parity[key], PARITY_TOL[tol_key]
+        if err > tol:
+            print(f"PARITY {key}: {err:g} > {tol:g}")
+            bad += 1
+
+    want = tracked.get("flash_crowd", {})
+    got = flash_crowd_counts(
+        rounds=want.get("rounds", 2), clients=want.get("clients", 6),
+        edges=want.get("edges", 3),
+    )
+    if got != want:
+        print(f"COUNTS flash_crowd: tracked={want} current={got}")
+        bad += 1
+    if got["dispatches"] >= got["serial_pair_items"]:
+        print(f"COUNTS flash_crowd: {got['dispatches']} dispatches not "
+              f"below {got['serial_pair_items']} serial pair items")
+        bad += 1
+    if got["batched_dispatches"] < 1:
+        print("COUNTS flash_crowd: no batched dispatch formed")
+        bad += 1
+
+    if bad:
+        print(f"\n{bad} kernel-bench check(s) failed. Re-baseline with "
+              "--update-kernels if the change is intentional.")
+        return 1
+    print(f"kernel bench OK: parity within tolerance, coalescing counts "
+          f"match {path}")
+    return 0

@@ -12,6 +12,13 @@ event signatures are tracked in ``benchmarks/tables/scenarios.json``.
 
   python -m benchmarks.run --only scenarios --check-tables   # CI gate
   python -m benchmarks.run --only scenarios --update-tables  # re-baseline
+
+The kernel batched-dispatch results are tracked in ``BENCH_kernels.json``
+at the repo root (structure / numeric parity / coalescing counts are
+gated; wall-clock numbers are informational only):
+
+  python -m benchmarks.run --check-kernels    # CI gate
+  python -m benchmarks.run --update-kernels   # re-baseline + re-time
 """
 from __future__ import annotations
 
@@ -95,9 +102,22 @@ def main() -> None:
                          "benchmarks/tables/scenarios.json and exit")
     ap.add_argument("--update-tables", action="store_true",
                     help="re-baseline benchmarks/tables/scenarios.json")
+    ap.add_argument("--check-kernels", action="store_true",
+                    help="verify BENCH_kernels.json structure, batched-"
+                         "kernel parity, and coalescing counts, then exit")
+    ap.add_argument("--update-kernels", action="store_true",
+                    help="re-baseline BENCH_kernels.json (re-times batched "
+                         "vs serial dispatch on the current backend)")
     args = ap.parse_args()
     if args.check_tables or args.update_tables:
         sys.exit(check_or_update_tables(args.update_tables))
+    if args.check_kernels or args.update_kernels:
+        from benchmarks import kernel_bench
+
+        if args.update_kernels:
+            kernel_bench.write_bench()
+            sys.exit(0)
+        sys.exit(kernel_bench.check_bench())
     only = set(args.only.split(",")) if args.only else set(SUITES)
 
     from benchmarks import fl_tables, kernel_bench

@@ -116,51 +116,72 @@ class FedEEC(FLAlgorithm):
 
     # -------------------------------------------------------------- jit steps
 
+    def _teacher_core(self, model_name):
+        apply_fn = get_fl_model(model_name)[1]
+        T = self.cfg.temperature
+
+        def fn(params, skr_state, bridge_x, labels):
+            z = apply_fn(params, bridge_x)
+            probs = jax.nn.softmax(z / T, axis=-1)
+            new_state, q = skr_process_batch(skr_state, probs, labels)
+            return probs, q, new_state
+
+        return fn
+
     def _teacher_fn(self, model_name):
         key = ("teacher", model_name)
         if key not in self._step_cache:
-            apply_fn = get_fl_model(model_name)[1]
-            T = self.cfg.temperature
-
-            @jax.jit
-            def fn(params, skr_state, bridge_x, labels):
-                z = apply_fn(params, bridge_x)
-                probs = jax.nn.softmax(z / T, axis=-1)
-                new_state, q = skr_process_batch(skr_state, probs, labels)
-                return probs, q, new_state
-
-            self._step_cache[key] = fn
+            self._step_cache[key] = jax.jit(self._teacher_core(model_name))
         return self._step_cache[key]
+
+    def _teacher_fn_batched(self, model_name):
+        """One dispatch for B stacked teachers of the same architecture."""
+        key = ("teacher", model_name, "vmap")
+        if key not in self._step_cache:
+            self._step_cache[key] = jax.jit(
+                jax.vmap(self._teacher_core(model_name))
+            )
+        return self._step_cache[key]
+
+    def _student_core(self, model_name, leaf: bool):
+        apply_fn = get_fl_model(model_name)[1]
+        beta, gamma, lr = self.cfg.beta, self.cfg.gamma, self.cfg.lr
+
+        if leaf:
+            def loss_fn(p, bx, by, tq, lx, ly):
+                zl = apply_fn(p, lx)
+                zb = apply_fn(p, bx)
+                return bsbodp.leaf_loss(zl, ly, zb, by, tq, beta, gamma)
+
+            def fn(params, opt, bx, by, tq, lx, ly):
+                l, g = jax.value_and_grad(loss_fn)(params, bx, by, tq, lx, ly)
+                params, opt = adamw_update(g, opt, params, lr=lr, weight_decay=0.0)
+                return params, opt, l
+        else:
+            def loss_fn(p, bx, by, tq):
+                zb = apply_fn(p, bx)
+                return bsbodp.non_leaf_loss(zb, by, tq, beta)
+
+            def fn(params, opt, bx, by, tq):
+                l, g = jax.value_and_grad(loss_fn)(params, bx, by, tq)
+                params, opt = adamw_update(g, opt, params, lr=lr, weight_decay=0.0)
+                return params, opt, l
+
+        return fn
 
     def _student_fn(self, model_name, leaf: bool):
         key = ("student", model_name, leaf)
         if key not in self._step_cache:
-            apply_fn = get_fl_model(model_name)[1]
-            beta, gamma, lr = self.cfg.beta, self.cfg.gamma, self.cfg.lr
+            self._step_cache[key] = jax.jit(self._student_core(model_name, leaf))
+        return self._step_cache[key]
 
-            if leaf:
-                def loss_fn(p, bx, by, tq, lx, ly):
-                    zl = apply_fn(p, lx)
-                    zb = apply_fn(p, bx)
-                    return bsbodp.leaf_loss(zl, ly, zb, by, tq, beta, gamma)
-
-                @jax.jit
-                def fn(params, opt, bx, by, tq, lx, ly):
-                    l, g = jax.value_and_grad(loss_fn)(params, bx, by, tq, lx, ly)
-                    params, opt = adamw_update(g, opt, params, lr=lr, weight_decay=0.0)
-                    return params, opt, l
-            else:
-                def loss_fn(p, bx, by, tq):
-                    zb = apply_fn(p, bx)
-                    return bsbodp.non_leaf_loss(zb, by, tq, beta)
-
-                @jax.jit
-                def fn(params, opt, bx, by, tq):
-                    l, g = jax.value_and_grad(loss_fn)(params, bx, by, tq)
-                    params, opt = adamw_update(g, opt, params, lr=lr, weight_decay=0.0)
-                    return params, opt, l
-
-            self._step_cache[key] = fn
+    def _student_fn_batched(self, model_name, leaf: bool):
+        """One fused update step for B stacked same-architecture students."""
+        key = ("student", model_name, leaf, "vmap")
+        if key not in self._step_cache:
+            self._step_cache[key] = jax.jit(
+                jax.vmap(self._student_core(model_name, leaf))
+            )
         return self._step_cache[key]
 
     def _decode_fn(self):
@@ -226,6 +247,67 @@ class FedEEC(FLAlgorithm):
         self._bsbodp_directional(v1, v2)
         self._bsbodp_directional(v2, v1)
 
+    def _pair_child(self, v1: str, v2: str) -> str:
+        """The child side of pair (v1, v2) — owner of the shared embeddings."""
+        return v1 if self.tree.parent.get(v1) == v2 else v2
+
+    def _bsbodp_directional_batched(self, pairs: list[tuple[str, str]]):
+        """Batched ``_bsbodp_directional``: B same-signature pairs with
+        disjoint node sets run each train step as ONE vmapped dispatch over
+        stacked (params, opt, skr) pytrees. Per-pair numerics match serial
+        execution given the same per-pair rng draws; only the global rng
+        consumption order differs (index draws go pair-major within a step
+        instead of step-major within a pair).
+        """
+        cfg = self.cfg
+        tmap = jax.tree_util.tree_map
+        v_s0, v_t0 = pairs[0]
+        children = [self._pair_child(vs, vt) for vs, vt in pairs]
+        embs = [self.embeddings[c] for c in children]
+        bs = min(cfg.batch_size, len(embs[0][1]))
+        steps = self.pair_steps(v_s0, v_t0)
+        is_leaf = v_s0 in self.client_data
+        dec_fn = self._decode_fn()
+        teacher = self._teacher_fn_batched(self.model_of[v_t0])
+        student = self._student_fn_batched(self.model_of[v_s0], is_leaf)
+        links = [self.comm.link_kind(self.tree, c) for c in children]
+
+        P_t = tmap(lambda *xs: jnp.stack(xs), *[self.params[vt] for _, vt in pairs])
+        S_t = tmap(lambda *xs: jnp.stack(xs), *[self.skr[vt] for _, vt in pairs])
+        P_s = tmap(lambda *xs: jnp.stack(xs), *[self.params[vs] for vs, _ in pairs])
+        O_s = tmap(lambda *xs: jnp.stack(xs), *[self.opt[vs] for vs, _ in pairs])
+
+        for _ in range(steps):
+            idx = [self.rng.choice(len(e[1]), size=bs, replace=len(e[1]) < bs)
+                   for e in embs]
+            e_b = np.stack([e[0][i] for e, i in zip(embs, idx)])
+            y_b = jnp.asarray(np.stack([e[1][i] for e, i in zip(embs, idx)]))
+            flat = dec_fn(jnp.asarray(e_b).reshape((-1,) + e_b.shape[2:]))
+            bridge = flat.reshape((len(pairs), bs) + flat.shape[1:])
+            probs, q, S_t = teacher(P_t, S_t, bridge, y_b)
+            tq = q if self.use_skr else probs
+            for link in links:
+                self.comm.record(link, bs * (cfg.num_classes + 1), "logits")
+            if is_leaf:
+                lxs, lys = [], []
+                for vs, _ in pairs:
+                    lx, ly = self.client_data[vs]
+                    li = self.rng.choice(len(ly), size=min(bs, len(ly)),
+                                         replace=len(ly) < bs)
+                    lxs.append(lx[li])
+                    lys.append(ly[li])
+                P_s, O_s, _ = student(
+                    P_s, O_s, bridge, y_b, tq,
+                    jnp.asarray(np.stack(lxs)), jnp.asarray(np.stack(lys)),
+                )
+            else:
+                P_s, O_s, _ = student(P_s, O_s, bridge, y_b, tq)
+
+        for b, (vs, vt) in enumerate(pairs):
+            self.skr[vt] = tmap(lambda x, b=b: x[b], S_t)
+            self.params[vs] = tmap(lambda x, b=b: x[b], P_s)
+            self.opt[vs] = tmap(lambda x, b=b: x[b], O_s)
+
     def pair_steps(self, v1: str, v2: str) -> int:
         """Distill steps one direction of pair (v1, v2) runs — the single
         formula both _bsbodp_directional and the simulator's work-item
@@ -263,6 +345,38 @@ class FedEEC(FLAlgorithm):
 
     def execute(self, item: WorkItem) -> None:
         self.bsbodp_pair(item.node, item.peer)
+
+    def batch_signature(self, item: WorkItem):
+        """Pairs coalesce when both sides' architectures, leaf-ness, step
+        count, and every per-step batch shape agree — exactly the fields
+        that make the stacked vmap dispatch shape-compatible and the
+        per-item comm bytes identical."""
+        if item.kind != "pair" or item.steps <= 0:
+            return None
+        v, p = item.node, item.peer
+        n = len(self.embeddings[self._pair_child(v, p)][1])
+        if n == 0:
+            return None
+        bs = min(self.cfg.batch_size, n)
+        sig = ("pair", self.model_of[v], self.model_of[p],
+               v in self.client_data, p in self.client_data, item.steps, bs)
+        for u in (v, p):
+            if u in self.client_data:
+                n_local = len(self.client_data[u][1])
+                sig += (min(bs, n_local), n_local < bs)
+        return sig
+
+    def execute_batch(self, items: list[WorkItem]) -> None:
+        """Coalesced BSBODP: run each direction of every pair in the group
+        as stacked vmapped steps (child-as-student for all pairs, then
+        parent-as-student — pairs share no nodes, so direction interleaving
+        across pairs cannot change any pair's own numerics)."""
+        if len(items) == 1:
+            self.execute(items[0])
+            return
+        pairs = [(it.node, it.peer) for it in items]
+        self._bsbodp_directional_batched([(v, p) for v, p in pairs])
+        self._bsbodp_directional_batched([(p, v) for v, p in pairs])
 
     def _model_params(self, node: str):
         return self.params[node]

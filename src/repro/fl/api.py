@@ -96,6 +96,26 @@ class FLAlgorithm(ABC):
     def execute(self, item: WorkItem) -> None:
         """Run one work item, recording its traffic on ``self.comm``."""
 
+    # -- batched execution (pair coalescing) --------------------------------
+
+    def batch_signature(self, item: WorkItem):
+        """Hashable dispatch-compatibility key for ``item``, or ``None``
+        when the item must run alone. The simulator may hand a group of
+        items whose signatures compare equal — and that share no
+        participant node — to :meth:`execute_batch` as one coalesced
+        dispatch. The default opts every item out of coalescing."""
+        return None
+
+    def execute_batch(self, items: list[WorkItem]) -> None:
+        """Run a group of same-signature, participant-disjoint items.
+
+        The default is the serial fallback. Algorithms with a batched fast
+        path (stacked params + ``jax.vmap``) override this; overrides must
+        record the same per-item comm bytes as serial execution would, so
+        the scheduler can attribute the group span evenly."""
+        for item in items:
+            self.execute(item)
+
     def begin_round(self, round: int) -> None:
         """Pre-round hook (e.g. DemLearn re-clustering). May migrate."""
 

@@ -41,6 +41,9 @@ class RunResult:
     event_counts: dict[str, int] = field(default_factory=dict)
     event_log: list[dict] = field(default_factory=list)
     event_signature: str = ""
+    # pair-coalescing counters (items vs actual dispatches; see
+    # SimEngine.dispatch_stats) — outside the event log by design
+    dispatch_stats: dict[str, int] = field(default_factory=dict)
 
     @property
     def final_acc(self) -> float:
@@ -205,3 +208,4 @@ def _run_simulated(trainer, scenario, cfg, ds, res, rounds, eval_every,
     res.event_counts = log.counts()
     res.event_log = log.entries
     res.event_signature = log.signature()
+    res.dispatch_stats = dict(engine.dispatch_stats)

@@ -10,6 +10,13 @@ scale (vocab up to 262k: the (tokens, vocab) probability tensor would be
 GBs per layer step). beta=0 degenerates to plain fused softmax-xent (used
 for the LM training loss).
 
+The native layout is batched: stacked inputs ``(B, N, V)`` where B indexes
+independent distillation pairs coalesced into one dispatch (the simulator
+stacks same-shape BSBODP pairs that become ready at the same sim time).
+The batch axis is an extra *parallel* grid dimension — per-row scratch is
+unchanged because the vocab axis stays the innermost sequential one. The
+2-D ``distill_loss`` entry point is a thin B=1 wrapper.
+
 Forward accumulators per row (running across vocab tiles j):
     m  = running max of z
     l  = sum exp(z - m)
@@ -19,13 +26,15 @@ Forward accumulators per row (running across vocab tiles j):
 Final: logZ = m + log l;  CE = logZ - zy;
        KL = sz/l - logZ - st/l.
 
-Backward (custom VJP, second kernel, elementwise over tiles):
+Backward (custom VJP, second kernel, elementwise over tiles; one dispatch
+for the whole batch):
     dz = g * [ lw*(softmax(z) - onehot_y)
                + beta * softmax(z) * ((z - logZ - t) - KL) ]
 
 Block shapes: lane dim (vocab) tiles of `block_v` (multiple of 128),
-sublane (rows) tiles of `block_n` (multiple of 8). The running stats live
-in VMEM scratch and persist across the sequential vocab grid axis.
+sublane (rows) tiles of `block_n` (multiple of 8), batch blocks of 1. The
+running stats live in VMEM scratch and persist across the sequential
+vocab grid axis.
 """
 from __future__ import annotations
 
@@ -36,7 +45,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.pallas_compat import CompilerParams
+from repro.kernels.pallas_compat import CompilerParams, resolve_interpret
 
 NEG = -1e30
 
@@ -46,7 +55,7 @@ def _fwd_kernel(
     m_s, l_s, sz_s, st_s, zy_s,
     *, block_v: int, n_v: int, beta: float, label_weight: float,
 ):
-    j = pl.program_id(1)
+    j = pl.program_id(2)  # vocab tile (innermost, sequential)
 
     @pl.when(j == 0)
     def _init():
@@ -56,9 +65,9 @@ def _fwd_kernel(
         st_s[...] = jnp.zeros_like(st_s)
         zy_s[...] = jnp.zeros_like(zy_s)
 
-    z = z_ref[...].astype(jnp.float32)  # (bn, bv)
-    t = t_ref[...].astype(jnp.float32)
-    y = y_ref[...]  # (bn,)
+    z = z_ref[0].astype(jnp.float32)  # (bn, bv)
+    t = t_ref[0].astype(jnp.float32)
+    y = y_ref[0]  # (bn,)
 
     m_old = m_s[...]
     m_new = jnp.maximum(m_old, z.max(axis=-1))
@@ -79,35 +88,35 @@ def _fwd_kernel(
         logz = m + jnp.log(jnp.maximum(l, 1e-38))
         ce = logz - zy_s[...]
         kl = sz_s[...] / l - logz - st_s[...] / l
-        loss_ref[...] = label_weight * ce + beta * kl
-        stats_ref[...] = jnp.stack([logz, kl], axis=-1)
+        loss_ref[0] = label_weight * ce + beta * kl
+        stats_ref[0] = jnp.stack([logz, kl], axis=-1)
 
 
 def _bwd_kernel(
     z_ref, t_ref, y_ref, stats_ref, g_ref, dz_ref,
     *, block_v: int, beta: float, label_weight: float,
 ):
-    j = pl.program_id(1)
-    z = z_ref[...].astype(jnp.float32)
-    t = t_ref[...].astype(jnp.float32)
-    y = y_ref[...]
-    logz = stats_ref[..., 0]
-    kl = stats_ref[..., 1]
-    g = g_ref[...]
+    j = pl.program_id(2)
+    z = z_ref[0].astype(jnp.float32)
+    t = t_ref[0].astype(jnp.float32)
+    y = y_ref[0]
+    logz = stats_ref[0, :, 0]
+    kl = stats_ref[0, :, 1]
+    g = g_ref[0]
     sp = jnp.exp(z - logz[:, None])
     col = j * block_v + jax.lax.broadcasted_iota(jnp.int32, z.shape, 1)
     onehot = (col == y[:, None]).astype(jnp.float32)
     dz = label_weight * (sp - onehot) + beta * sp * ((z - logz[:, None] - t) - kl[:, None])
-    dz_ref[...] = (g[:, None] * dz).astype(dz_ref.dtype)
+    dz_ref[0] = (g[:, None] * dz).astype(dz_ref.dtype)
 
 
 def _pad(z, t, y, block_n, block_v):
-    N, V = z.shape
+    B, N, V = z.shape
     n_pad = (-N) % block_n
     v_pad = (-V) % block_v
-    z = jnp.pad(z, ((0, n_pad), (0, v_pad)), constant_values=NEG)
-    t = jnp.pad(t, ((0, n_pad), (0, v_pad)))
-    y = jnp.pad(y, (0, n_pad))
+    z = jnp.pad(z, ((0, 0), (0, n_pad), (0, v_pad)), constant_values=NEG)
+    t = jnp.pad(t, ((0, 0), (0, n_pad), (0, v_pad)))
+    y = jnp.pad(y, ((0, 0), (0, n_pad)))
     return z, t, y, N, V
 
 
@@ -116,12 +125,13 @@ def _pad(z, t, y, block_n, block_v):
 )
 def _distill_loss_fwd(
     logits, teacher_logprobs, labels, *, beta, label_weight,
-    block_n=8, block_v=512, interpret=True,
+    block_n=8, block_v=512, interpret=None,
 ):
+    interpret = resolve_interpret(interpret)
     z, t, y, N, V = _pad(logits, teacher_logprobs, labels, block_n, block_v)
-    Np, Vp = z.shape
+    B, Np, Vp = z.shape
     n_v = Vp // block_v
-    grid = (Np // block_n, n_v)
+    grid = (B, Np // block_n, n_v)
     loss, stats = pl.pallas_call(
         functools.partial(
             _fwd_kernel, block_v=block_v, n_v=n_v, beta=beta,
@@ -129,25 +139,25 @@ def _distill_loss_fwd(
         ),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((block_n, block_v), lambda i, j: (i, j)),
-            pl.BlockSpec((block_n, block_v), lambda i, j: (i, j)),
-            pl.BlockSpec((block_n,), lambda i, j: (i,)),
+            pl.BlockSpec((1, block_n, block_v), lambda b, i, j: (b, i, j)),
+            pl.BlockSpec((1, block_n, block_v), lambda b, i, j: (b, i, j)),
+            pl.BlockSpec((1, block_n), lambda b, i, j: (b, i)),
         ],
         out_specs=[
-            pl.BlockSpec((block_n,), lambda i, j: (i,)),
-            pl.BlockSpec((block_n, 2), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, block_n), lambda b, i, j: (b, i)),
+            pl.BlockSpec((1, block_n, 2), lambda b, i, j: (b, i, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((Np,), jnp.float32),
-            jax.ShapeDtypeStruct((Np, 2), jnp.float32),
+            jax.ShapeDtypeStruct((B, Np), jnp.float32),
+            jax.ShapeDtypeStruct((B, Np, 2), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((block_n,), jnp.float32) for _ in range(5)],
         compiler_params=CompilerParams(
-            dimension_semantics=("parallel", "arbitrary")
+            dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
         interpret=interpret,
     )(z, t, y)
-    return loss[:N], stats[:N]
+    return loss[:, :N], stats[:, :N]
 
 
 @functools.partial(
@@ -155,44 +165,49 @@ def _distill_loss_fwd(
 )
 def _distill_loss_bwd(
     logits, teacher_logprobs, labels, stats, g, *, beta, label_weight,
-    block_n=8, block_v=512, interpret=True,
+    block_n=8, block_v=512, interpret=None,
 ):
+    interpret = resolve_interpret(interpret)
     z, t, y, N, V = _pad(logits, teacher_logprobs, labels, block_n, block_v)
-    stats_p = jnp.pad(stats, ((0, z.shape[0] - N), (0, 0)))
-    g_p = jnp.pad(g, (0, z.shape[0] - N))
-    Np, Vp = z.shape
-    grid = (Np // block_n, Vp // block_v)
+    B, Np, Vp = z.shape
+    stats_p = jnp.pad(stats, ((0, 0), (0, Np - N), (0, 0)))
+    g_p = jnp.pad(g, ((0, 0), (0, Np - N)))
+    grid = (B, Np // block_n, Vp // block_v)
     dz = pl.pallas_call(
         functools.partial(
             _bwd_kernel, block_v=block_v, beta=beta, label_weight=label_weight
         ),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((block_n, block_v), lambda i, j: (i, j)),
-            pl.BlockSpec((block_n, block_v), lambda i, j: (i, j)),
-            pl.BlockSpec((block_n,), lambda i, j: (i,)),
-            pl.BlockSpec((block_n, 2), lambda i, j: (i, 0)),
-            pl.BlockSpec((block_n,), lambda i, j: (i,)),
+            pl.BlockSpec((1, block_n, block_v), lambda b, i, j: (b, i, j)),
+            pl.BlockSpec((1, block_n, block_v), lambda b, i, j: (b, i, j)),
+            pl.BlockSpec((1, block_n), lambda b, i, j: (b, i)),
+            pl.BlockSpec((1, block_n, 2), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_n), lambda b, i, j: (b, i)),
         ],
-        out_specs=pl.BlockSpec((block_n, block_v), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((Np, Vp), logits.dtype),
+        out_specs=pl.BlockSpec((1, block_n, block_v), lambda b, i, j: (b, i, j)),
+        out_shape=jax.ShapeDtypeStruct((B, Np, Vp), logits.dtype),
         compiler_params=CompilerParams(
-            dimension_semantics=("parallel", "arbitrary")
+            dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
         interpret=interpret,
     )(z, t, y, stats_p, g_p)
-    return dz[:N, :V]
+    return dz[:, :N, :V]
 
 
 # ---------------------------------------------------------------------------
-# public custom-VJP op
+# public custom-VJP ops: batched (B, N, V) native, 2-D thin wrapper
 # ---------------------------------------------------------------------------
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
-def distill_loss(logits, teacher_logprobs, labels, beta=1.0, label_weight=1.0,
-                 interpret=True):
-    """Per-row fused CE + beta*KL. Differentiable w.r.t. ``logits`` only
+def distill_loss_batched(logits, teacher_logprobs, labels, beta=1.0,
+                         label_weight=1.0, interpret=None):
+    """Per-row fused CE + beta*KL over stacked pairs.
+
+    logits/teacher_logprobs: (B, N, V); labels: (B, N). Returns (B, N)
+    losses from ONE kernel dispatch (forward and backward each). B indexes
+    independent coalesced pairs. Differentiable w.r.t. ``logits`` only
     (the teacher is a constant under online distillation)."""
     loss, _ = _distill_loss_fwd(
         logits, teacher_logprobs, labels, beta=beta, label_weight=label_weight,
@@ -218,4 +233,13 @@ def _vjp_bwd(beta, label_weight, interpret, res, g):
     return dz, None, None
 
 
-distill_loss.defvjp(_vjp_fwd, _vjp_bwd)
+distill_loss_batched.defvjp(_vjp_fwd, _vjp_bwd)
+
+
+def distill_loss(logits, teacher_logprobs, labels, beta=1.0, label_weight=1.0,
+                 interpret=None):
+    """2-D (N, V) entry point: B=1 slice of the batched kernel."""
+    return distill_loss_batched(
+        logits[None], teacher_logprobs[None], labels[None],
+        beta, label_weight, interpret,
+    )[0]

@@ -24,7 +24,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.pallas_compat import CompilerParams
+from repro.kernels.pallas_compat import CompilerParams, resolve_interpret
 
 NEG = -1e30
 
@@ -94,13 +94,15 @@ def flash_attention(
     q_offset: int = 0,
     block_q: int = 128,
     block_k: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ):
     """q: (B, Sq, N, H); k/v: (B, Sk, K, H); N % K == 0. Returns (B, Sq, N, H).
 
     Sq/Sk are padded to block multiples internally; padded kv positions are
-    masked explicitly (cols >= Sk never contribute).
+    masked explicitly (cols >= Sk never contribute). ``interpret=None``
+    auto-detects: compiled on TPU, interpreter elsewhere.
     """
+    interpret = resolve_interpret(interpret)
     B, Sq, N, H = q.shape
     K = k.shape[2]
     G = N // K

@@ -2,29 +2,32 @@
 
 On TPU the kernels run compiled (interpret=False); on CPU they run under the
 Pallas interpreter (bit-for-bit the same kernel body) or fall through to the
-pure-jnp oracle for speed in large test sweeps. The oracle in ref.py is
-always the numerics ground truth.
+pure-jnp oracle for speed in large test sweeps. Backend detection lives in
+``repro.kernels.pallas_compat.resolve_interpret`` — the kernels default to
+``interpret=None`` and auto-detect, so these wrappers no longer thread a
+hard-coded flag. The oracle in ref.py is always the numerics ground truth.
 """
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref as R
-from repro.kernels.distill_loss import distill_loss as _distill_loss
+from repro.kernels.distill_loss import (
+    distill_loss as _distill_loss,
+    distill_loss_batched as _distill_loss_batched,
+)
 from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.pallas_compat import has_tpu_backend
 from repro.kernels.rwkv6_scan import rwkv6_scan as _rwkv6
-from repro.kernels.skr_rectify import skr_rectify as _skr
+from repro.kernels.skr_rectify import (
+    skr_rectify as _skr,
+    skr_rectify_batched as _skr_batched,
+)
 
 
 def on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
-def _interp() -> bool:
-    return not on_tpu()
+    return has_tpu_backend()
 
 
 # --- public ops --------------------------------------------------------------
@@ -33,33 +36,45 @@ def _interp() -> bool:
 def fused_softmax_xent(logits, labels):
     """Per-row CE without materializing softmax (beta=0 distill_loss)."""
     zeros = jnp.zeros_like(logits)
-    return _distill_loss(logits, zeros, labels, 0.0, 1.0, _interp())
+    return _distill_loss(logits, zeros, labels, 0.0, 1.0, None)
 
 
 def fused_distill_loss(logits, teacher_logprobs, labels, *, beta: float,
                        label_weight: float = 1.0):
     """Fused Eq.(3)/(32): CE + beta*KL per row (custom VJP, vocab-tiled)."""
     return _distill_loss(
-        logits, teacher_logprobs, labels, beta, label_weight, _interp()
+        logits, teacher_logprobs, labels, beta, label_weight, None
+    )
+
+
+def fused_distill_loss_batched(logits, teacher_logprobs, labels, *,
+                               beta: float, label_weight: float = 1.0):
+    """Batched Eq.(3)/(32) over stacked pairs (B, N, V) — one kernel
+    dispatch forward and backward for the whole coalesced group."""
+    return _distill_loss_batched(
+        logits, teacher_logprobs, labels, beta, label_weight, None
     )
 
 
 def skr_rectify(probs, labels, qbar, counts):
-    if on_tpu():
-        return _skr(probs, labels, qbar, counts, interpret=False)
-    return _skr(probs, labels, qbar, counts, interpret=True)
+    return _skr(probs, labels, qbar, counts)
+
+
+def skr_rectify_batched(probs, labels, qbar, counts):
+    """Stacked (B, N, C) rectification with per-pair (B, C) queue stats."""
+    return _skr_batched(probs, labels, qbar, counts)
 
 
 def flash_attention(q, k, v, *, causal=True, window=0, q_offset=0,
                     block_q=128, block_k=128):
     return _flash(
         q, k, v, causal=causal, window=window, q_offset=q_offset,
-        block_q=block_q, block_k=block_k, interpret=_interp(),
+        block_q=block_q, block_k=block_k,
     )
 
 
 def rwkv6_scan(r, k, v, w, u, s0, *, chunk: int = 64):
-    return _rwkv6(r, k, v, w, u, s0, chunk=chunk, interpret=_interp())
+    return _rwkv6(r, k, v, w, u, s0, chunk=chunk, interpret=not on_tpu())
 
 
 # Re-export oracles for tests/benchmarks

@@ -1,12 +1,35 @@
-"""Version shims for the Pallas TPU API.
+"""Version shims + backend probing for the Pallas TPU API.
 
 JAX >= 0.5 exposes ``pltpu.CompilerParams``; 0.4.x called the same
 dataclass ``TPUCompilerParams`` (same fields, including
 ``dimension_semantics``). Kernels import the name from here so they
 compile against either.
+
+``resolve_interpret`` is the single decision point for interpret mode:
+kernels default their ``interpret`` argument to ``None`` and resolve it
+here, so the Pallas kernels compile for real hardware when a TPU backend
+is present and fall back to the interpreter everywhere else — instead of
+each call site hard-coding ``interpret=True``.
 """
 from __future__ import annotations
 
+import jax
 from jax.experimental.pallas import tpu as pltpu
 
 CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
+
+def has_tpu_backend() -> bool:
+    """True iff this process's default JAX backend is a real TPU."""
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:  # backend probing can fail in exotic setups
+        return False
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """``None`` -> interpret exactly when no TPU backend is present;
+    an explicit bool is passed through untouched (tests force ``True``)."""
+    if interpret is None:
+        return not has_tpu_backend()
+    return bool(interpret)

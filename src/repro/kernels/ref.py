@@ -47,6 +47,19 @@ def distill_loss_grad_ref(logits, labels, teacher_logprobs, beta, label_weight=1
     return label_weight * dce + beta * dkl
 
 
+def distill_loss_batched_ref(logits, labels, teacher_logprobs, beta,
+                             label_weight=1.0):
+    """Stacked-pair oracle: vmap of ``distill_loss_ref`` over (B, N, V)."""
+    return jax.vmap(
+        lambda z, y, t: distill_loss_ref(z, y, t, beta, label_weight)
+    )(logits, labels, teacher_logprobs)
+
+
+def skr_rectify_batched_ref(probs, labels, qbar, counts):
+    """Stacked-pair oracle: vmap of ``skr_rectify_ref`` over (B, N, C)."""
+    return jax.vmap(skr_rectify_ref)(probs, labels, qbar, counts)
+
+
 def softmax_xent_ref(logits, labels):
     """Plain CE per row (the beta=0 special case used for the LM loss)."""
     logits = logits.astype(jnp.float32)

@@ -33,6 +33,42 @@ from repro.sim.network import NetworkModel
 from repro.sim.scenarios import ScenarioConfig
 
 
+def plan_groups(items, signature_of):
+    """Partition work items enabled at the same sim instant into dispatch
+    groups, preserving serial scheduling semantics exactly.
+
+    An item joins the FIRST existing group such that (a) the group's
+    signature equals the item's, and (b) the item conflicts — shares a
+    participant (node or peer; the empty peer "" counts, mirroring the
+    scheduler's shared ``ready[""]`` slot) — with no member of that group
+    *nor of any later group*. Otherwise it opens a new group at the end.
+    Groups dispatch in creation order, so clause (b) guarantees every item
+    runs after all earlier-enabled items it serializes behind: conflicting
+    items always land in strictly increasing groups, and per-item start
+    times computed group-by-group reproduce the serial schedule exactly.
+    ``signature_of(item) -> None`` forces a singleton group.
+    """
+    groups: list[dict] = []  # {"sig", "items", "nodes"} per dispatch group
+    for it in items:
+        sig = signature_of(it)
+        parts = {it.node, it.peer}
+        placed = None
+        if sig is not None:
+            for gi, g in enumerate(groups):
+                if g["sig"] != sig:
+                    continue
+                if any(parts & h["nodes"] for h in groups[gi:]):
+                    continue
+                placed = g
+                break
+        if placed is None:
+            groups.append({"sig": sig, "items": [it], "nodes": set(parts)})
+        else:
+            placed["items"].append(it)
+            placed["nodes"] |= parts
+    return [g["items"] for g in groups]
+
+
 class SimEngine:
     def __init__(
         self,
@@ -61,6 +97,14 @@ class SimEngine:
         # self-organizing re-clustering), not just by the churn process
         self.tree.on_migrate(self._external_migration)
         trainer.on_migrate_refused(self._external_refusal)
+        # pair-coalescing counters (outside the event log: the log's
+        # signature must stay bit-identical whether or not groups form)
+        self.dispatch_stats = {
+            "items": 0,            # work items executed
+            "dispatches": 0,       # dispatch groups (batched or singleton)
+            "batched_dispatches": 0,  # groups with >= 2 items
+            "batched_items": 0,    # items that rode a batched group
+        }
         for v in sorted(self.churn.stragglers):
             self.log.note(0.0, "straggle", node=v,
                           slowdown=scenario.straggler_slowdown)
@@ -181,34 +225,75 @@ class SimEngine:
         }
         ready = dict(busy)  # node -> time it becomes free
 
-        def schedule(item: WorkItem, enabled_at: float) -> None:
-            v, p = item.node, item.peer
-            start = max(enabled_at, ready.get(v, t0), ready.get(p, t0), t0)
-            with self.trainer.comm.span() as sp:
-                self.trainer.execute(item)
-            nbytes = sum(sp.by_link.values())
-            dur = self._item_compute_s(item) + self.net.transfer_s(v, nbytes)
-            ready[v] = ready[p] = start + dur
-            q.push(start, "pair_start", v, p)
-            q.push(start + dur, "pair_done", v, p,
-                   bytes=nbytes, dur=round(dur, 6))
+        def dispatch(enabled: list[tuple[WorkItem, float]]) -> None:
+            """Execute the items that became dependency-free at one sim
+            instant, coalescing same-signature independent items into one
+            ``execute_batch`` call. Start times are computed per group in
+            creation order (so ``ready`` serialization matches the serial
+            schedule exactly), and events are pushed in the ORIGINAL item
+            order — the queue's (time, seq) assignment, and therefore the
+            log signature, is bit-identical to one-item-at-a-time dispatch.
+            """
+            enabled_at = {it: t for it, t in enabled}
+            groups = plan_groups(
+                [it for it, _ in enabled], self.trainer.batch_signature
+            )
+            self.dispatch_stats["items"] += len(enabled)
+            self.dispatch_stats["dispatches"] += len(groups)
+            timed: dict[WorkItem, tuple[float, float, int]] = {}
+            for group in groups:
+                starts = [
+                    max(enabled_at[it], ready.get(it.node, t0),
+                        ready.get(it.peer, t0), t0)
+                    for it in group
+                ]
+                with self.trainer.comm.span() as sp:
+                    if len(group) == 1:
+                        self.trainer.execute(group[0])
+                    else:
+                        self.trainer.execute_batch(group)
+                        self.dispatch_stats["batched_dispatches"] += 1
+                        self.dispatch_stats["batched_items"] += len(group)
+                total = sum(sp.by_link.values())
+                # same-signature items record identical traffic, so the even
+                # split is exact; floor division keeps the serial sum's type
+                # (int stays int, float stays float — a type flip would
+                # change the JSON byte payloads and break signature identity)
+                nbytes = total // len(group)
+                for it, start in zip(group, starts):
+                    dur = self._item_compute_s(it) \
+                        + self.net.transfer_s(it.node, nbytes)
+                    ready[it.node] = ready[it.peer] = start + dur
+                    timed[it] = (start, dur, nbytes)
+            for it, _ in enabled:
+                start, dur, nbytes = timed[it]
+                q.push(start, "pair_start", it.node, it.peer)
+                q.push(start + dur, "pair_done", it.node, it.peer,
+                       bytes=nbytes, dur=round(dur, 6))
 
-        for it in items:
-            if deps[it.node] == 0:
-                schedule(it, t0)
+        dispatch([(it, t0) for it in items if deps[it.node] == 0])
 
         while q:
-            ev = q.pop()
-            self.now = max(self.now, ev.time)
-            self.log.append(ev)
-            if ev.kind != "pair_done":
-                continue
-            parent = ev.target
-            if parent not in scheduled:
-                continue
-            deps[parent] -= 1
-            if deps[parent] == 0:
-                schedule(scheduled[parent], ev.time)
+            # drain every event at the earliest queued instant before
+            # dispatching what they enabled: pops never push, so deferring
+            # the pushes keeps seq assignment identical to serial dispatch
+            # while exposing same-time-enabled items for coalescing
+            t = q.peek_time()
+            enabled: list[tuple[WorkItem, float]] = []
+            while q and q.peek_time() == t:
+                ev = q.pop()
+                self.now = max(self.now, ev.time)
+                self.log.append(ev)
+                if ev.kind != "pair_done":
+                    continue
+                parent = ev.target
+                if parent not in scheduled:
+                    continue
+                deps[parent] -= 1
+                if deps[parent] == 0:
+                    enabled.append((scheduled[parent], ev.time))
+            if enabled:
+                dispatch(enabled)
 
         self.trainer.end_round(r)
 

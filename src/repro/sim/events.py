@@ -58,6 +58,10 @@ class EventQueue:
     def pop(self) -> Event:
         return heapq.heappop(self._heap)[2]
 
+    def peek_time(self) -> float:
+        """Time of the earliest queued event (queue must be non-empty)."""
+        return self._heap[0][0]
+
     def __len__(self) -> int:
         return len(self._heap)
 

@@ -4,10 +4,11 @@ import jax.numpy as jnp
 import pytest
 
 from repro.kernels import ops, ref
-from repro.kernels.distill_loss import distill_loss
+from repro.kernels.distill_loss import distill_loss, distill_loss_batched
 from repro.kernels.flash_attention import flash_attention
+from repro.kernels.pallas_compat import has_tpu_backend, resolve_interpret
 from repro.kernels.rwkv6_scan import rwkv6_scan
-from repro.kernels.skr_rectify import skr_rectify
+from repro.kernels.skr_rectify import skr_rectify, skr_rectify_batched
 
 KEY = jax.random.PRNGKey(0)
 
@@ -69,6 +70,75 @@ def test_distill_loss_grad_matches():
     g = jax.grad(lambda zz: distill_loss(zz, tl, y, 2.0, 1.0, True).sum())(z)
     want = ref.distill_loss_grad_ref(z, y, tl, 2.0)
     assert jnp.allclose(g, want, atol=1e-5)
+
+
+# --- batched (stacked-pair) entry points ------------------------------------
+
+
+def _distill_batch(B, N, V):
+    z = jax.random.normal(KEY, (B, N, V)) * 4
+    tl = jax.nn.log_softmax(
+        jax.random.normal(jax.random.fold_in(KEY, 1), (B, N, V)), -1
+    )
+    y = jax.random.randint(jax.random.fold_in(KEY, 2), (B, N), 0, V)
+    return z, tl, y
+
+
+# ragged rows/vocab exercise the padded tail of every tile axis
+@pytest.mark.parametrize("B,N,V", [(1, 8, 128), (3, 9, 1111), (4, 16, 500)])
+@pytest.mark.parametrize("beta", [0.0, 1.5])
+def test_distill_loss_batched_matches_serial(B, N, V, beta):
+    z, tl, y = _distill_batch(B, N, V)
+    out = distill_loss_batched(z, tl, y, beta, 1.0, True)
+    assert out.shape == (B, N)
+    for b in range(B):
+        want = distill_loss(z[b], tl[b], y[b], beta, 1.0, True)
+        assert jnp.allclose(out[b], want, atol=1e-5), \
+            float(jnp.max(jnp.abs(out[b] - want)))
+
+
+def test_distill_loss_batched_grad_matches_serial():
+    B, N, V = 3, 10, 300
+    z, tl, y = _distill_batch(B, N, V)
+    g = jax.grad(lambda zz: distill_loss_batched(zz, tl, y, 2.0, 1.0, True).sum())(z)
+    assert g.shape == z.shape
+    for b in range(B):
+        want = jax.grad(
+            lambda zz: distill_loss(zz, tl[b], y[b], 2.0, 1.0, True).sum()
+        )(z[b])
+        assert jnp.allclose(g[b], want, atol=1e-5), \
+            float(jnp.max(jnp.abs(g[b] - want)))
+        oracle = ref.distill_loss_grad_ref(z[b], y[b], tl[b], 2.0)
+        assert jnp.allclose(g[b], oracle, atol=1e-5)
+
+
+@pytest.mark.parametrize("B,N,C", [(1, 8, 10), (3, 9, 257), (2, 33, 100)])
+def test_skr_rectify_batched_matches_serial(B, N, C):
+    probs = jax.nn.softmax(jax.random.normal(KEY, (B, N, C)) * 2, -1)
+    labels = jax.random.randint(jax.random.fold_in(KEY, 1), (B, N), 0, C)
+    qbar = jax.random.uniform(
+        jax.random.fold_in(KEY, 2), (B, C), minval=0.1, maxval=0.9
+    )
+    counts = jax.random.randint(jax.random.fold_in(KEY, 3), (B, C), 0, 3)
+    out = skr_rectify_batched(probs, labels, qbar, counts, interpret=True)
+    assert out.shape == (B, N, C)
+    for b in range(B):
+        want = skr_rectify(probs[b], labels[b], qbar[b], counts[b],
+                           interpret=True)
+        assert jnp.allclose(out[b], want, atol=1e-6)
+
+
+def test_interpret_autodetect():
+    """interpret=None resolves to compiled on TPU, interpreter elsewhere —
+    and the resolved default matches this host's backend."""
+    assert resolve_interpret(True) is True
+    assert resolve_interpret(False) is False
+    assert resolve_interpret(None) == (not has_tpu_backend())
+    # the default-interpret path runs end to end on this host
+    z, tl, y = _distill_batch(1, 8, 128)
+    out = distill_loss(z[0], tl[0], y[0], 1.0, 1.0, None)
+    want = ref.distill_loss_ref(z[0], y[0], tl[0], 1.0)
+    assert jnp.allclose(out, want, atol=1e-5)
 
 
 def test_fused_xent_matches_ce():
