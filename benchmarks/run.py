@@ -19,6 +19,12 @@ gated; wall-clock numbers are informational only):
 
   python -m benchmarks.run --check-kernels    # CI gate
   python -m benchmarks.run --update-kernels   # re-baseline + re-time
+
+The telemetry-plane contract (metric names, span categories, critical-path
+gate attribution) is tracked in ``BENCH_obs.json`` at the repo root:
+
+  python -m benchmarks.run --check-obs     # CI gate
+  python -m benchmarks.run --update-obs    # re-baseline
 """
 from __future__ import annotations
 
@@ -108,6 +114,11 @@ def main() -> None:
     ap.add_argument("--update-kernels", action="store_true",
                     help="re-baseline BENCH_kernels.json (re-times batched "
                          "vs serial dispatch on the current backend)")
+    ap.add_argument("--check-obs", action="store_true",
+                    help="verify BENCH_obs.json metric names, span "
+                         "categories, and critical-path gate, then exit")
+    ap.add_argument("--update-obs", action="store_true",
+                    help="re-baseline BENCH_obs.json")
     args = ap.parse_args()
     if args.check_tables or args.update_tables:
         sys.exit(check_or_update_tables(args.update_tables))
@@ -118,6 +129,13 @@ def main() -> None:
             kernel_bench.write_bench()
             sys.exit(0)
         sys.exit(kernel_bench.check_bench())
+    if args.check_obs or args.update_obs:
+        from benchmarks import obs_bench
+
+        if args.update_obs:
+            obs_bench.write_bench()
+            sys.exit(0)
+        sys.exit(obs_bench.check_bench())
     only = set(args.only.split(",")) if args.only else set(SUITES)
 
     from benchmarks import fl_tables, kernel_bench

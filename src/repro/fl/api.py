@@ -137,13 +137,22 @@ class FLAlgorithm(ABC):
     # -- plain (round-counted) execution ------------------------------------
 
     def train_round(self) -> None:
+        from repro.obs.trace import active_tracer
+
         r = self._round
+        tr = active_tracer()
         self.begin_round(r)
         for item in self.work_items(r, self.participates):
             if self.participates(item.node) and (
                 not item.peer or self.participates(item.peer)
             ):
-                self.execute(item)
+                if tr is None:
+                    self.execute(item)
+                else:
+                    with tr.span(f"execute {item.kind} {item.node}",
+                                 cat="execute", round=r, node=item.node,
+                                 peer=item.peer):
+                        self.execute(item)
         self.end_round(r)
         self._round += 1
 

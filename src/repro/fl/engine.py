@@ -41,13 +41,26 @@ class RunResult:
     event_counts: dict[str, int] = field(default_factory=dict)
     event_log: list[dict] = field(default_factory=list)
     event_signature: str = ""
-    # pair-coalescing counters (items vs actual dispatches; see
-    # SimEngine.dispatch_stats) — outside the event log by design
-    dispatch_stats: dict[str, int] = field(default_factory=dict)
+    # metrics-registry snapshot of the run (repro.obs.metrics) — outside
+    # the event log by design; see docs/observability.md for the names
+    metrics: dict[str, dict] = field(default_factory=dict)
 
     @property
     def final_acc(self) -> float:
         return self.acc_curve[-1] if self.acc_curve else 0.0
+
+    @property
+    def dispatch_stats(self) -> dict[str, int]:
+        """Pair-coalescing counters — compatibility view over ``metrics``
+        (the old hand-rolled ``SimEngine.dispatch_stats`` dict)."""
+        def val(name: str) -> int:
+            return int(self.metrics.get(name, {}).get("value", 0))
+        return {
+            "items": val("sim_dispatch_items_total"),
+            "dispatches": val("sim_dispatches_total"),
+            "batched_dispatches": val("sim_batched_dispatches_total"),
+            "batched_items": val("sim_batched_items_total"),
+        }
 
     @property
     def sim_curve(self) -> list[tuple[float, float]]:
@@ -126,25 +139,31 @@ def run_experiment(
     verbose: bool = False,
     migration_round: int | None = None,
     scenario=None,
+    tracer=None,
 ) -> RunResult:
     """Run ``algorithm`` for R rounds.
 
     ``scenario`` (a name from ``repro.sim.scenarios`` or a
     ``ScenarioConfig``; falls back to ``cfg.scenario``) switches to the
-    event-driven simulated-network path.
+    event-driven simulated-network path. ``tracer`` (a
+    ``repro.obs.trace.Tracer``) records hierarchical spans of the run —
+    it is installed as the active tracer so kernel/eval spans nest too.
     """
+    from repro.obs.trace import tracing
+
     ds, tree, client_data, auto = build_problem(cfg)
     trainer = create_algorithm(algorithm, cfg, tree, client_data, auto)
     rounds = rounds if rounds is not None else cfg.rounds
     res = RunResult(algorithm, cfg)
     scenario = scenario if scenario is not None else (cfg.scenario or None)
     t0 = time.time()
-    if scenario is not None:
-        _run_simulated(trainer, scenario, cfg, ds, res, rounds,
-                       eval_every, verbose)
-    else:
-        _run_plain(trainer, algorithm, ds, res, rounds, eval_every,
-                   verbose, migration_round)
+    with tracing(tracer):
+        if scenario is not None:
+            _run_simulated(trainer, scenario, cfg, ds, res, rounds,
+                           eval_every, verbose, tracer)
+        else:
+            _run_plain(trainer, algorithm, ds, res, rounds, eval_every,
+                       verbose, migration_round)
     res.comm_bytes = trainer.comm.summary()
     res.wall_s = time.time() - t0
     return res
@@ -184,12 +203,12 @@ def _run_plain(trainer, algorithm, ds, res, rounds, eval_every, verbose,
 
 
 def _run_simulated(trainer, scenario, cfg, ds, res, rounds, eval_every,
-                   verbose):
+                   verbose, tracer=None):
     from repro.sim.engine import SimEngine
     from repro.sim.scenarios import get_scenario
 
     sc = get_scenario(scenario) if isinstance(scenario, str) else scenario
-    engine = SimEngine(trainer, sc, seed=cfg.seed)
+    engine = SimEngine(trainer, sc, seed=cfg.seed, tracer=tracer)
 
     def eval_fn():
         return accuracy(trainer.cloud_apply(), trainer.cloud_params(),
@@ -208,4 +227,4 @@ def _run_simulated(trainer, scenario, cfg, ds, res, rounds, eval_every,
     res.event_counts = log.counts()
     res.event_log = log.entries
     res.event_signature = log.signature()
-    res.dispatch_stats = dict(engine.dispatch_stats)
+    res.metrics = engine.metrics.snapshot()

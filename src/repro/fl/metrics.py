@@ -1,15 +1,42 @@
 """Evaluation metrics for the FL plane."""
 from __future__ import annotations
 
+import time
+from collections import OrderedDict
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs.metrics import global_registry
+
+# Jitted argmax-predict per apply_fn. Re-jitting the lambda on every call
+# recompiled every evaluation round; the cache is keyed on the apply_fn
+# object (algorithms hand out a stable function per model) and LRU-bounded
+# so sweeps over many models don't pin dead executables.
+_PREDICT_CACHE: OrderedDict = OrderedDict()
+_PREDICT_CACHE_MAX = 8
+
+
+def _predict_fn(apply_fn):
+    fn = _PREDICT_CACHE.get(apply_fn)
+    if fn is None:
+        fn = jax.jit(lambda p, xb: jnp.argmax(apply_fn(p, xb), axis=-1))
+        _PREDICT_CACHE[apply_fn] = fn
+        while len(_PREDICT_CACHE) > _PREDICT_CACHE_MAX:
+            _PREDICT_CACHE.popitem(last=False)
+    else:
+        _PREDICT_CACHE.move_to_end(apply_fn)
+    return fn
+
 
 def accuracy(apply_fn, params, x, y, batch: int = 256) -> float:
+    t0 = time.perf_counter()
     correct = 0
-    fn = jax.jit(lambda p, xb: jnp.argmax(apply_fn(p, xb), axis=-1))
+    fn = _predict_fn(apply_fn)
     for i in range(0, len(y), batch):
         pred = np.asarray(fn(params, jnp.asarray(x[i : i + batch])))
         correct += int((pred == y[i : i + batch]).sum())
+    global_registry().histogram("fl_eval_wall_seconds").observe(
+        time.perf_counter() - t0)
     return correct / len(y)

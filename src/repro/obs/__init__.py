@@ -1,0 +1,26 @@
+"""Telemetry plane for the EECC stack (see docs/observability.md).
+
+  trace.py          hierarchical spans -> Chrome trace JSON (Perfetto)
+  metrics.py        counter/gauge/histogram registry -> JSON / Prometheus
+  critical_path.py  per-round gating attribution from logs or traces
+  report.py         `python -m repro.obs.report` CLI
+
+Instrumentation is zero-overhead when disabled and never touches the
+simulator's event log — `benchmarks.run --check-tables` signatures are
+bit-identical with tracing on and off.
+"""
+from repro.obs.critical_path import (  # noqa: F401
+    explain,
+    rounds_from_eventlog,
+    rounds_from_trace,
+)
+from repro.obs.metrics import (  # noqa: F401
+    MetricsRegistry,
+    global_registry,
+)
+from repro.obs.trace import (  # noqa: F401
+    Tracer,
+    active_tracer,
+    set_active_tracer,
+    tracing,
+)

@@ -24,9 +24,13 @@ Theorems 1-2): a refused move is logged as ``migrate_refused`` with
 """
 from __future__ import annotations
 
+from contextlib import nullcontext
 from typing import Callable, Optional
 
+from repro.core.topology import link_kind
 from repro.fl.api import FLAlgorithm, MigrationRefused, WorkItem
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import Tracer
 from repro.sim.churn import ChurnProcess
 from repro.sim.events import EventLog, EventQueue
 from repro.sim.network import NetworkModel
@@ -76,6 +80,8 @@ class SimEngine:
         scenario: ScenarioConfig,
         *,
         seed: int = 0,
+        tracer: Optional[Tracer] = None,
+        metrics: Optional[MetricsRegistry] = None,
     ):
         self.trainer = trainer
         self.tree = trainer.tree
@@ -97,17 +103,38 @@ class SimEngine:
         # self-organizing re-clustering), not just by the churn process
         self.tree.on_migrate(self._external_migration)
         trainer.on_migrate_refused(self._external_refusal)
-        # pair-coalescing counters (outside the event log: the log's
-        # signature must stay bit-identical whether or not groups form)
-        self.dispatch_stats = {
-            "items": 0,            # work items executed
-            "dispatches": 0,       # dispatch groups (batched or singleton)
-            "batched_dispatches": 0,  # groups with >= 2 items
-            "batched_items": 0,    # items that rode a batched group
-        }
+        # telemetry plane (docs/observability.md): the tracer and registry
+        # live OUTSIDE the event log, whose signature must stay bit-identical
+        # whether or not they are attached
+        self.tracer = tracer
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        for name in ("sim_dispatch_items_total", "sim_dispatches_total",
+                     "sim_batched_dispatches_total",
+                     "sim_batched_items_total", "sim_migrate_refused_total",
+                     "sim_migrations_total", "sim_dropouts_total",
+                     "sim_rejoins_total"):
+            self.metrics.counter(name)
+        self.metrics.histogram("sim_queue_depth",
+                               buckets=(1, 2, 4, 8, 16, 32, 64, 128))
+        self.metrics.histogram("sim_round_duration_seconds",
+                               buckets=(1, 5, 15, 60, 300, 1800))
         for v in sorted(self.churn.stragglers):
+            self.metrics.gauge("sim_straggler_compute_factor", node=v).set(
+                scenario.straggler_slowdown)
             self.log.note(0.0, "straggle", node=v,
                           slowdown=scenario.straggler_slowdown)
+
+    @property
+    def dispatch_stats(self) -> dict[str, int]:
+        """Pair-coalescing counters (items vs actual dispatches) — a thin
+        compatibility view over the metrics registry."""
+        c = self.metrics.counter
+        return {
+            "items": int(c("sim_dispatch_items_total").value),
+            "dispatches": int(c("sim_dispatches_total").value),
+            "batched_dispatches": int(c("sim_batched_dispatches_total").value),
+            "batched_items": int(c("sim_batched_items_total").value),
+        }
 
     # -- hooks -------------------------------------------------------------
 
@@ -118,6 +145,7 @@ class SimEngine:
 
     def _external_refusal(self, node: str, target: str, reason: str) -> None:
         if not self._in_migrate:
+            self.metrics.counter("sim_migrate_refused_total").inc()
             self.log.note(self.now, "migrate_refused", node=node,
                           target=target, reason=reason, source="trainer")
 
@@ -140,10 +168,12 @@ class SimEngine:
         """Apply and log this round's churn; returns node -> busy-until
         times for nodes delayed by migration transfers."""
         busy: dict[str, float] = {}
+        m = self.metrics.counter
         for act in self.churn.draw_round(r, self.now):
             if act.kind == "migrate":
                 if act.target not in self.tree.nodes or \
                         act.node not in self.tree.parent:
+                    m("sim_migrate_refused_total").inc()
                     self.log.note(self.now, "migrate_refused", node=act.node,
                                   target=act.target)
                     continue
@@ -153,17 +183,35 @@ class SimEngine:
                     dur, nbytes = self._apply_migration(act.node, act.target)
                 except MigrationRefused:
                     # Theorem 2: the interaction protocol forbids the move
+                    m("sim_migrate_refused_total").inc()
                     self.log.note(self.now, "migrate_refused", node=act.node,
                                   target=act.target, reason="protocol")
                     continue
                 busy[act.node] = max(busy.get(act.node, 0.0), self.now + dur)
+                m("sim_migrations_total").inc()
+                if self.tracer is not None:
+                    self.tracer.add_span(
+                        "migrate", cat="churn", node=act.node,
+                        sim_t0=self.now, sim_t1=self.now + dur,
+                        round=r, target=act.target, bytes=nbytes,
+                    )
                 self.log.note(self.now, "migrate", node=act.node,
                               target=act.target, bytes=nbytes,
                               dur=round(dur, 6))
             elif act.kind == "dropout":
+                m("sim_dropouts_total").inc()
+                if self.tracer is not None:
+                    self.tracer.add_span(
+                        "offline", cat="churn", node=act.node,
+                        sim_t0=self.now, sim_t1=act.until, round=r,
+                    )
                 self.log.note(self.now, "dropout", node=act.node,
                               until=round(act.until, 6))
             elif act.kind == "rejoin":
+                m("sim_rejoins_total").inc()
+                if self.tracer is not None:
+                    self.tracer.instant("rejoin", sim_t=self.now,
+                                        node=act.node)
                 self.log.note(self.now, "rejoin", node=act.node)
         return busy
 
@@ -180,6 +228,17 @@ class SimEngine:
             return item.steps * sc.base_step_s * self.churn.compute_factor(item.node)
         # "aggregate" runs on an interior tier: fast, step-count cheap
         return item.steps * sc.base_step_s / sc.tier_speedup
+
+    def _item_straggle(self, item: WorkItem) -> tuple[float, str]:
+        """(compute factor, straggling participant) of the slowest
+        participant — trace attribution only, never priced here."""
+        f_node = self.churn.compute_factor(item.node)
+        f_peer = self.churn.compute_factor(item.peer) if item.peer else 1.0
+        if f_peer > f_node:
+            return f_peer, item.peer
+        if f_node > 1.0:
+            return f_node, item.node
+        return 1.0, ""
 
     def _run_round_items(self, r: int, busy: dict[str, float]) -> None:
         """Schedule the trainer's work items through their dependency
@@ -238,8 +297,10 @@ class SimEngine:
             groups = plan_groups(
                 [it for it, _ in enabled], self.trainer.batch_signature
             )
-            self.dispatch_stats["items"] += len(enabled)
-            self.dispatch_stats["dispatches"] += len(groups)
+            counter = self.metrics.counter
+            counter("sim_dispatch_items_total").inc(len(enabled))
+            counter("sim_dispatches_total").inc(len(groups))
+            tr = self.tracer
             timed: dict[WorkItem, tuple[float, float, int]] = {}
             for group in groups:
                 starts = [
@@ -247,24 +308,49 @@ class SimEngine:
                         ready.get(it.peer, t0), t0)
                     for it in group
                 ]
-                with self.trainer.comm.span() as sp:
-                    if len(group) == 1:
-                        self.trainer.execute(group[0])
-                    else:
-                        self.trainer.execute_batch(group)
-                        self.dispatch_stats["batched_dispatches"] += 1
-                        self.dispatch_stats["batched_items"] += len(group)
-                total = sum(sp.by_link.values())
-                # same-signature items record identical traffic, so the even
-                # split is exact; floor division keeps the serial sum's type
-                # (int stays int, float stays float — a type flip would
-                # change the JSON byte payloads and break signature identity)
-                nbytes = total // len(group)
-                for it, start in zip(group, starts):
-                    dur = self._item_compute_s(it) \
-                        + self.net.transfer_s(it.node, nbytes)
-                    ready[it.node] = ready[it.peer] = start + dur
-                    timed[it] = (start, dur, nbytes)
+                with (tr.span("dispatch_group", cat="dispatch",
+                              n_items=len(group), round=r)
+                      if tr is not None else nullcontext()):
+                    with (tr.span("execute_batch" if len(group) > 1
+                                  else "execute", cat="execute",
+                                  n_items=len(group))
+                          if tr is not None else nullcontext()) as es, \
+                            self.trainer.comm.span() as sp:
+                        if len(group) == 1:
+                            self.trainer.execute(group[0])
+                        else:
+                            self.trainer.execute_batch(group)
+                            counter("sim_batched_dispatches_total").inc()
+                            counter("sim_batched_items_total").inc(len(group))
+                    total = sum(sp.by_link.values())
+                    # same-signature items record identical traffic, so the
+                    # even split is exact; floor division keeps the serial
+                    # sum's type (int stays int, float stays float — a type
+                    # flip would change the JSON byte payloads and break
+                    # signature identity)
+                    nbytes = total // len(group)
+                    host_each = (es.host_dur / len(group)
+                                 if tr is not None else 0.0)
+                    for it, start in zip(group, starts):
+                        comp = self._item_compute_s(it)
+                        xfer = self.net.transfer_s(it.node, nbytes)
+                        dur = comp + xfer
+                        counter("sim_link_bytes_total",
+                                link=link_kind(self.tree, it.node)).inc(nbytes)
+                        if tr is not None:
+                            factor, slow = self._item_straggle(it)
+                            tr.add_span(
+                                f"{it.kind} {it.node}->{it.peer}",
+                                cat="item", node=it.node,
+                                sim_t0=start, sim_t1=start + dur,
+                                host_dur=host_each, kind=it.kind,
+                                peer=it.peer, round=r, bytes=nbytes,
+                                compute_s=round(comp, 6),
+                                transfer_s=round(xfer, 6),
+                                straggle=factor, straggle_node=slow,
+                            )
+                        ready[it.node] = ready[it.peer] = start + dur
+                        timed[it] = (start, dur, nbytes)
             for it, _ in enabled:
                 start, dur, nbytes = timed[it]
                 q.push(start, "pair_start", it.node, it.peer)
@@ -279,6 +365,7 @@ class SimEngine:
             # the pushes keeps seq assignment identical to serial dispatch
             # while exposing same-time-enabled items for coalescing
             t = q.peek_time()
+            self.metrics.histogram("sim_queue_depth").observe(len(q))
             enabled: list[tuple[WorkItem, float]] = []
             while q and q.peek_time() == t:
                 ev = q.pop()
@@ -306,17 +393,33 @@ class SimEngine:
         eval_fn: Optional[Callable[[], float]] = None,
         eval_every: int = 1,
     ) -> EventLog:
+        tr = self.tracer
         for r in range(rounds):
+            t_start = self.now
             self.log.note(self.now, "round_start", round=r)
-            busy = self._round_churn(r)
-            self.trainer.set_participation(
-                v for v in self.churn.devices
-                if self.churn.is_online(v, self.now)
-            )
-            self._run_round_items(r, busy)
+            with (tr.span(f"round {r}", cat="round", sim_t0=self.now,
+                          round=r)
+                  if tr is not None else nullcontext()) as rsp:
+                with (tr.span("churn", cat="churn", sim_t0=self.now,
+                              round=r)
+                      if tr is not None else nullcontext()) as csp:
+                    busy = self._round_churn(r)
+                    if tr is not None:
+                        csp.sim_t1 = self.now
+                self.trainer.set_participation(
+                    v for v in self.churn.devices
+                    if self.churn.is_online(v, self.now)
+                )
+                self._run_round_items(r, busy)
+                if tr is not None:
+                    rsp.sim_t1 = self.now
+            self.metrics.histogram("sim_round_duration_seconds").observe(
+                self.now - t_start)
             self.log.note(self.now, "round_end", round=r)
             if eval_fn and ((r + 1) % eval_every == 0 or r == rounds - 1):
-                acc = eval_fn()
+                with (tr.span("eval", cat="eval", round=r)
+                      if tr is not None else nullcontext()):
+                    acc = eval_fn()
                 self.acc_points.append((round(self.now, 6), acc))
                 self.log.note(self.now, "eval", round=r, acc=round(acc, 6))
         return self.log

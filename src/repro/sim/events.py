@@ -8,6 +8,14 @@ function of (scenario, seed) and can be replayed bit-for-bit.
 The log keeps one flat dict per event (JSON-serializable); its
 ``signature()`` is a stable hash used by the determinism tests and by
 ``runner.py --verify`` to prove replays are identical.
+
+Every entry additionally carries ``ord`` — a monotonic append counter
+that totally orders the log, including same-instant ``note`` entries
+(whose legacy ``seq`` is the constant ``-1``: notes never pass through
+the queue). ``ord`` exists for trace reconstruction
+(``repro.obs.critical_path``) and is EXCLUDED from ``signature()``, so
+tracked signatures in ``benchmarks/tables/scenarios.json`` are unchanged
+by its introduction.
 """
 from __future__ import annotations
 
@@ -74,14 +82,20 @@ class EventLog:
 
     def __init__(self):
         self.entries: list[dict] = []
+        self._ord = 0  # monotonic append counter (see module docstring)
+
+    def _stamp(self, rec: dict) -> None:
+        rec["ord"] = self._ord
+        self._ord += 1
+        self.entries.append(rec)
 
     def append(self, ev: Event) -> None:
-        self.entries.append(ev.record())
+        self._stamp(ev.record())
 
     def note(self, time: float, kind: str, **fields) -> None:
         rec = {"t": round(time, 6), "seq": -1, "kind": kind}
         rec.update(fields)
-        self.entries.append(rec)
+        self._stamp(rec)
 
     def count(self, kind: str) -> int:
         return sum(1 for e in self.entries if e["kind"] == kind)
@@ -98,6 +112,12 @@ class EventLog:
 
     def signature(self) -> str:
         """Stable content hash — identical across replays of the same
-        (scenario, seed); rounding in ``Event.record`` absorbs float fuzz."""
-        blob = json.dumps(self.entries, sort_keys=True).encode()
+        (scenario, seed); rounding in ``Event.record`` absorbs float fuzz.
+        The ``ord`` append counter is excluded so the hash is byte-for-byte
+        what pre-``ord`` logs produced (the scenarios.json gate)."""
+        blob = json.dumps(
+            [{k: v for k, v in e.items() if k != "ord"}
+             for e in self.entries],
+            sort_keys=True,
+        ).encode()
         return hashlib.sha256(blob).hexdigest()[:16]

@@ -9,6 +9,11 @@ Prints the event log and the accuracy-vs-simulated-seconds curve;
 twice with the same seed and asserts the event logs are identical
 (determinism proof). The default problem size is CPU-friendly; scale up
 with --clients/--edges/--samples.
+
+Telemetry (docs/observability.md): ``--trace OUT.json`` records a
+hierarchical Chrome trace (open it in Perfetto), ``--metrics OUT.json``
+writes the metrics-registry snapshot, and ``--explain-rounds`` prints the
+per-round critical-path attribution (who gated the round and why).
 """
 from __future__ import annotations
 
@@ -42,7 +47,8 @@ def describe(res, max_events: int) -> None:
     )
     for e in shown:
         t = e["t"] if isinstance(e["t"], str) else f"{e['t']:10.3f}"
-        extra = {k: v for k, v in e.items() if k not in ("t", "seq", "kind")}
+        extra = {k: v for k, v in e.items()
+                 if k not in ("t", "seq", "kind", "ord")}
         print(f"  t={t}  {e['kind']:<12} {extra if extra else ''}")
     print(f"\n== event counts ==\n  {res.event_counts}")
     print("\n== accuracy vs simulated wall-clock ==")
@@ -78,6 +84,12 @@ def main(argv=None) -> int:
     ap.add_argument("--max-events", type=int, default=60,
                     help="max event-log lines to print")
     ap.add_argument("--out", default="", help="write event log JSON here")
+    ap.add_argument("--trace", default="",
+                    help="write a Chrome trace (Perfetto-openable) here")
+    ap.add_argument("--metrics", default="",
+                    help="write the metrics-registry snapshot JSON here")
+    ap.add_argument("--explain-rounds", action="store_true",
+                    help="print per-round critical-path attribution")
     ap.add_argument("--list", action="store_true",
                     help="list registered scenarios and exit")
     ap.add_argument("--verify", action="store_true",
@@ -113,17 +125,47 @@ def main(argv=None) -> int:
         print(f"scenario={name} algorithm={args.algorithm} "
               f"rounds={args.rounds} clients={cfg.num_clients} "
               f"edges={cfg.num_edges} seed={cfg.seed}")
+        tracer = None
+        if args.trace:
+            from repro.obs.trace import Tracer
+
+            tracer = Tracer()
         res = run_experiment(args.algorithm, cfg, rounds=args.rounds,
-                             eval_every=args.eval_every, verbose=True)
+                             eval_every=args.eval_every, verbose=True,
+                             tracer=tracer)
         describe(res, args.max_events)
+
+        def _path(opt):
+            return opt if len(names) == 1 else f"{name}.{opt}"
 
         if args.out:
             import json
 
-            path = args.out if len(names) == 1 else f"{name}.{args.out}"
-            with open(path, "w") as f:
+            with open(_path(args.out), "w") as f:
                 json.dump(res.event_log, f, indent=1)
-            print(f"\nevent log written to {path}")
+            print(f"\nevent log written to {_path(args.out)}")
+
+        if tracer is not None:
+            tracer.to_json(_path(args.trace))
+            print(f"\nChrome trace written to {_path(args.trace)} "
+                  "(open in https://ui.perfetto.dev)")
+
+        if args.metrics:
+            import json
+
+            from repro.obs.metrics import global_registry
+
+            snap = dict(res.metrics)
+            snap.update(global_registry().snapshot())
+            with open(_path(args.metrics), "w") as f:
+                json.dump(snap, f, indent=1, sort_keys=True)
+            print(f"metrics snapshot written to {_path(args.metrics)}")
+
+        if args.explain_rounds:
+            from repro.obs.critical_path import explain, rounds_from_eventlog
+
+            print("\n== critical-path attribution ==")
+            print(explain(rounds_from_eventlog(res.event_log)))
 
         if args.verify:
             res2 = run_experiment(args.algorithm, cfg, rounds=args.rounds,

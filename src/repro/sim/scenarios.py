@@ -70,6 +70,10 @@ class ScenarioConfig:
 
 SCENARIOS: dict[str, ScenarioConfig] = {}
 
+# CLI conveniences resolved by get_scenario; NOT in list_scenarios(), so
+# the scenarios.json signature table keys only canonical names
+ALIASES: dict[str, str] = {"straggler": "straggler_heavy"}
+
 
 def register_scenario(sc: ScenarioConfig) -> ScenarioConfig:
     assert sc.name not in SCENARIOS, f"duplicate scenario {sc.name!r}"
@@ -78,6 +82,7 @@ def register_scenario(sc: ScenarioConfig) -> ScenarioConfig:
 
 
 def get_scenario(name: str) -> ScenarioConfig:
+    name = ALIASES.get(name, name)
     if name not in SCENARIOS:
         raise KeyError(
             f"unknown scenario {name!r}; known: {sorted(SCENARIOS)}"

@@ -1,0 +1,256 @@
+"""Telemetry plane tests: tracer spans, Chrome export, metrics registry,
+critical-path attribution, and the no-perturbation guarantee (tracing on
+vs off must produce byte-identical event logs)."""
+from __future__ import annotations
+
+import json
+
+import pytest
+
+from repro.obs.critical_path import (
+    rounds_from_eventlog,
+    rounds_from_trace,
+)
+from repro.obs.metrics import MetricsRegistry, global_registry
+from repro.obs.trace import Tracer, active_tracer, tracing
+from repro.sim.events import EventLog
+
+
+# ---------------------------------------------------------------------------
+# Tracer
+# ---------------------------------------------------------------------------
+
+
+def test_span_nesting_and_ordering():
+    tr = Tracer()
+    with tr.span("outer", cat="round") as outer:
+        with tr.span("mid", cat="dispatch") as mid:
+            with tr.span("inner", cat="kernel") as inner:
+                pass
+        with tr.span("sibling", cat="dispatch") as sib:
+            pass
+    assert [sp.sid for sp in tr.spans] == [0, 1, 2, 3]
+    assert outer.parent == -1
+    assert mid.parent == outer.sid
+    assert inner.parent == mid.sid
+    assert sib.parent == outer.sid  # reopened at the right depth
+    for sp in tr.spans:
+        assert sp.t1_host >= sp.t0_host >= 0.0
+
+
+def test_add_span_parents_under_open_span():
+    tr = Tracer()
+    with tr.span("round 0", cat="round") as rsp:
+        it = tr.add_span("pair a->b", cat="item", node="a",
+                         sim_t0=1.0, sim_t1=2.5, peer="b")
+    orphan = tr.add_span("late", cat="item", node="c", sim_t0=0.0, sim_t1=1.0)
+    assert it.parent == rsp.sid
+    assert orphan.parent == -1
+    assert it.sim_t1 - it.sim_t0 == pytest.approx(1.5)
+
+
+def test_active_tracer_plumbing():
+    assert active_tracer() is None
+    tr = Tracer()
+    with tracing(tr):
+        assert active_tracer() is tr
+        with tracing(None):
+            assert active_tracer() is None
+        assert active_tracer() is tr
+    assert active_tracer() is None
+
+
+def test_chrome_trace_schema():
+    tr = Tracer()
+    with tr.span("round 0", cat="round", sim_t0=0.0, round=0) as rsp:
+        tr.add_span("pair a->b", cat="item", node="a",
+                    sim_t0=0.0, sim_t1=1.0, peer="b", round=0)
+        tr.instant("rejoin", sim_t=0.5, node="b")
+        rsp.sim_t1 = 1.0
+    with tr.span("host only", cat="eval"):
+        pass
+    doc = tr.to_chrome()
+    json.loads(json.dumps(doc))  # serializable round trip
+    evs = doc["traceEvents"]
+    assert all("ph" in e and "pid" in e for e in evs)
+    meta = [e for e in evs if e["ph"] == "M"]
+    assert {e["args"]["name"] for e in meta if e["name"] == "process_name"} \
+        == {"sim (simulated time)", "host (wall clock)"}
+    rows = {e["args"]["name"] for e in meta if e["name"] == "thread_name"}
+    assert {"scheduler", "a", "b"} <= rows
+    xs = [e for e in evs if e["ph"] == "X"]
+    assert all(isinstance(e["ts"], float) and e["dur"] >= 0 for e in xs)
+    item = next(e for e in xs if e["cat"] == "item")
+    # node rides in args so rounds_from_trace can rebuild attribution
+    assert item["args"]["node"] == "a"
+    assert item["ts"] == 0.0 and item["dur"] == pytest.approx(1e6)
+    host = next(e for e in xs if e["cat"] == "eval")
+    assert host["pid"] != item["pid"]
+    assert any(e["ph"] == "i" for e in evs)
+
+
+# ---------------------------------------------------------------------------
+# Metrics registry
+# ---------------------------------------------------------------------------
+
+
+def test_metrics_snapshot_roundtrip():
+    reg = MetricsRegistry()
+    reg.counter("sim_dispatches_total").inc()
+    reg.counter("sim_link_bytes_total", link="end-edge").inc(1024)
+    reg.counter("sim_link_bytes_total", link="edge-cloud").inc(2048)
+    reg.gauge("sim_straggler_compute_factor", node="client1").set(8.0)
+    h = reg.histogram("sim_round_duration_seconds")
+    for v in (0.05, 0.5, 5.0):
+        h.observe(v)
+    snap = reg.snapshot()
+    assert snap == json.loads(json.dumps(snap))
+    assert snap['sim_link_bytes_total{link="end-edge"}']["value"] == 1024
+    hd = snap["sim_round_duration_seconds"]
+    assert hd["count"] == 3 and hd["sum"] == pytest.approx(5.55)
+    assert hd["min"] == 0.05 and hd["max"] == 5.0
+    assert sum(hd["buckets"].values()) == hd["count"]
+    assert reg.names() == sorted(reg.names())
+
+
+def test_metrics_type_conflict_raises():
+    reg = MetricsRegistry()
+    reg.counter("sim_dispatches_total")
+    with pytest.raises(TypeError):
+        reg.gauge("sim_dispatches_total")
+
+
+def test_prometheus_exposition():
+    reg = MetricsRegistry()
+    reg.counter("sim_dispatches_total").inc(3)
+    reg.histogram("kernel_dispatch_seconds", kernel="skr").observe(0.002)
+    text = reg.to_prometheus()
+    assert "# TYPE sim_dispatches_total counter" in text
+    assert "sim_dispatches_total 3" in text
+    assert "# TYPE kernel_dispatch_seconds histogram" in text
+    assert 'kernel_dispatch_seconds_bucket{kernel="skr",le="+Inf"} 1' in text
+    assert 'kernel_dispatch_seconds_count{kernel="skr"} 1' in text
+
+
+# ---------------------------------------------------------------------------
+# Critical path
+# ---------------------------------------------------------------------------
+
+
+def _entry(t, kind, seq=0, **kw):
+    return {"t": t, "seq": seq, "kind": kind, **kw}
+
+
+def test_critical_path_two_edge_eventlog():
+    # two edges; client1 is an 8x straggler whose chain gates the round:
+    #   client1->edge1 [0, 0.8] --> edge1->cloud [0.8, 1.0]
+    # while the edge0 subtree finishes early with slack.
+    log = [
+        _entry(0.0, "straggle", seq=-1, node="client1", slowdown=8.0),
+        _entry(0.0, "round_start", seq=-1, round=0),
+        _entry(0.0, "pair_start", node="client0", target="edge0"),
+        _entry(0.0, "pair_start", node="client1", target="edge1"),
+        _entry(0.1, "pair_done", node="client0", target="edge0", bytes=64),
+        _entry(0.1, "pair_start", node="edge0", target="cloud"),
+        _entry(0.3, "pair_done", node="edge0", target="cloud", bytes=256),
+        _entry(0.8, "pair_done", node="client1", target="edge1", bytes=64),
+        _entry(0.8, "pair_start", node="edge1", target="cloud"),
+        _entry(1.0, "pair_done", node="edge1", target="cloud", bytes=256),
+        _entry(1.0, "round_end", seq=-1, round=0),
+    ]
+    reports = rounds_from_eventlog(log)
+    assert len(reports) == 1
+    rep = reports[0]
+    assert rep.makespan == pytest.approx(1.0)
+    assert [(it.node, it.peer) for it in rep.path] == [
+        ("client1", "edge1"), ("edge1", "cloud")]
+    assert rep.gate_node == "client1"
+    assert rep.gate_factor == "straggle"
+    assert rep.gate.straggle == 8.0
+    assert rep.slack == [pytest.approx(0.7), pytest.approx(0.9)]
+
+
+def test_critical_path_from_trace_matches_and_splits_factor():
+    tr = Tracer()
+    with tr.span("round 0", cat="round", sim_t0=0.0, round=0) as rsp:
+        tr.add_span("pair client1->edge1", cat="item", node="client1",
+                    sim_t0=0.0, sim_t1=0.8, peer="edge1", round=0,
+                    compute_s=0.78, transfer_s=0.02,
+                    straggle=8.0, straggle_node="client1")
+        tr.add_span("pair client0->edge0", cat="item", node="client0",
+                    sim_t0=0.0, sim_t1=0.1, peer="edge0", round=0,
+                    compute_s=0.08, transfer_s=0.02, straggle=1.0)
+        tr.add_span("pair edge1->cloud", cat="item", node="edge1",
+                    sim_t0=0.8, sim_t1=1.0, peer="cloud", round=0,
+                    compute_s=0.05, transfer_s=0.15, straggle=1.0)
+        rsp.sim_t1 = 1.0
+    reports = rounds_from_trace(tr.to_chrome())
+    assert len(reports) == 1
+    rep = reports[0]
+    assert [(it.node, it.peer) for it in rep.path] == [
+        ("client1", "edge1"), ("edge1", "cloud")]
+    assert rep.gate_node == "client1" and rep.gate_factor == "straggle"
+    # a transfer-bound, non-straggling item reports the exact factor
+    tail = rep.path[-1]
+    assert tail.transfer_s > tail.compute_s
+    from repro.obs.critical_path import _factor
+
+    assert _factor(tail) == "transfer"
+
+
+# ---------------------------------------------------------------------------
+# Event-log ordinals + no-perturbation guarantee
+# ---------------------------------------------------------------------------
+
+
+def test_eventlog_ord_monotonic_and_excluded_from_signature():
+    log = EventLog()
+    log.note(0.0, "round_start", round=0)
+    log.note(1.0, "round_end", round=0)
+    log.note(2.0, "round_start", round=1)
+    assert [e["ord"] for e in log.entries] == [0, 1, 2]
+    sig = log.signature()
+    for e in log.entries:
+        e["ord"] += 100  # ord must never reach the content hash
+    assert log.signature() == sig
+
+
+def test_tracing_does_not_perturb_event_log():
+    from repro.configs.fedeec_paper import paper_setting
+    from repro.fl.engine import run_experiment
+
+    cfg = paper_setting(
+        "synth_cifar10", 4, 2, samples_per_client=8, test_samples=32,
+        image_size=8, embed_dim=16, scenario="straggler_heavy",
+    )
+    plain = run_experiment("fedeec", cfg, rounds=1, eval_every=1)
+    traced = run_experiment("fedeec", cfg, rounds=1, eval_every=1,
+                            tracer=Tracer())
+    assert traced.event_signature == plain.event_signature
+    assert traced.event_log == plain.event_log  # ords included
+
+
+# ---------------------------------------------------------------------------
+# Eval metrics satellite
+# ---------------------------------------------------------------------------
+
+
+def test_predict_fn_cached_per_apply_fn():
+    import jax.numpy as jnp
+
+    from repro.fl.metrics import _predict_fn, accuracy
+
+    def apply_a(p, xb):
+        return xb @ p
+
+    def apply_b(p, xb):
+        return xb @ p * 2.0
+
+    assert _predict_fn(apply_a) is _predict_fn(apply_a)
+    assert _predict_fn(apply_a) is not _predict_fn(apply_b)
+
+    before = global_registry().histogram("fl_eval_wall_seconds").count
+    acc = accuracy(apply_a, jnp.eye(3), jnp.eye(3), [0, 1, 2])
+    assert acc == 1.0
+    assert global_registry().histogram("fl_eval_wall_seconds").count \
+        == before + 1
