@@ -1,0 +1,72 @@
+"""The ``--check-analysis`` gate: static analysis + kernel contract table.
+
+Tracked artifact is ``BENCH_analysis.json`` at the repo root, next to
+BENCH_kernels.json / BENCH_obs.json. Two layers:
+
+* the analysis itself must pass — zero findings outside the inline
+  ``# analysis: allow[...]`` annotations and the checked-in baseline
+  (``analysis-baseline.json``, kept empty);
+* the *contract surface* is tracked: the rule inventory (IDs + titles)
+  and the per-kernel contract table (grid, block shapes, VMEM estimate,
+  VJP status). Adding/removing a rule or changing a kernel's resource
+  geometry shows up as a tracked diff, not a silent drift.
+
+Everything here is deterministic — no wall clock, no RNG — so check runs
+are bit-stable.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from benchmarks import gate
+
+BENCH_PATH = os.path.normpath(
+    os.path.join(os.path.dirname(__file__), "..", "BENCH_analysis.json"))
+
+
+def collect() -> dict:
+    from repro.analysis import contract_table, repo_root, run_analysis
+    from repro.analysis.kernel_contracts import KRN_EXPLAIN
+    from repro.analysis.rules import RULES
+
+    root = repo_root()
+    findings, suppressed = run_analysis(root=root)
+    return {
+        "rules": {rid: RULES[rid].title for rid in sorted(RULES)},
+        "kernel_rules": sorted(KRN_EXPLAIN),
+        "kernel_contracts": contract_table(
+            os.path.join(root, "BENCH_kernels.json")),
+        "counts": {
+            "findings": len(findings),
+            "inline_allowed": len(suppressed),
+        },
+    }
+
+
+def write_bench(path: str = BENCH_PATH) -> dict:
+    return gate.write_tracked(path, collect())
+
+
+def check_bench(path: str = BENCH_PATH) -> int:
+    """--check-analysis: the analysis must pass AND the tracked contract
+    surface (rule inventory + kernel contract table) must match."""
+    from repro.analysis import BASELINE_NAME, Baseline, repo_root, run_analysis
+
+    root = repo_root()
+    findings, _ = run_analysis(root=root)
+    baseline = Baseline.load(os.path.join(root, BASELINE_NAME))
+    new, _ = baseline.split(findings)
+    problems = [f.render() for f in new]
+
+    tracked = gate.load_tracked(path, "--update-analysis")
+    if tracked is None:
+        return 2
+    problems += gate.diff_keys(tracked, collect(),
+                               ("rules", "kernel_rules", "kernel_contracts"))
+    return gate.report(
+        "static analysis", problems,
+        f"0 new findings, contract surface matches {path}",
+        "--update-analysis (or fix/annotate the finding)")

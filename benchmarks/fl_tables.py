@@ -9,7 +9,6 @@ from __future__ import annotations
 import json
 import os
 import time
-from dataclasses import replace
 
 from repro.configs.base import FLConfig
 from repro.configs.fedeec_paper import paper_setting

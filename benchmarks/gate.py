@@ -1,0 +1,73 @@
+"""Shared machinery for the ``benchmarks.run --check-*`` gate family.
+
+Every gate (scenario signatures, kernel bench, obs contract, static
+analysis) follows the same shape: a tracked JSON artifact, a ``collect()``
+that recomputes the current state, a diff that prints ``MISMATCH`` lines,
+and a three-way exit code (0 ok, 1 drift, 2 no tracked file). This module
+is that shape, written once — the per-gate modules keep only their
+domain-specific collection and extra checks.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+from typing import Any
+
+
+def load_tracked(path: str, update_flag: str) -> dict | None:
+    """The tracked artifact, or None (with the exit-2 message printed)."""
+    if not os.path.exists(path):
+        print(f"error: no tracked file at {path}; run {update_flag} first",
+              file=sys.stderr)
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def write_tracked(path: str, payload: dict) -> dict:
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {path}")
+    return payload
+
+
+def diff_value(key: str, want: Any, got: Any) -> list[str]:
+    """MISMATCH lines for one key (list-aware: shows missing/added)."""
+    if want == got:
+        return []
+    if isinstance(want, list) and isinstance(got, list):
+        missing = sorted(set(want) - set(got))
+        added = sorted(set(got) - set(want))
+        return [f"MISMATCH {key}: missing={missing} added={added}"]
+    return [f"MISMATCH {key}: tracked={want} current={got}"]
+
+
+def diff_keys(tracked: dict, got: dict, keys) -> list[str]:
+    lines: list[str] = []
+    for key in keys:
+        lines += diff_value(key, tracked.get(key), got.get(key))
+    return lines
+
+
+def diff_mapping(tracked: dict, got: dict) -> list[str]:
+    """Diff two flat mappings over the union of their keys."""
+    lines: list[str] = []
+    for key in sorted(set(tracked) | set(got)):
+        lines += diff_value(key, tracked.get(key), got.get(key))
+    return lines
+
+
+def report(name: str, problems: list[str], ok_detail: str,
+           rebaseline_flag: str) -> int:
+    """Print the gate verdict and return its exit code."""
+    for line in problems:
+        print(line)
+    if problems:
+        print(f"\n{len(problems)} {name} check(s) failed. If the change is "
+              f"intentional, re-baseline with {rebaseline_flag}.",
+              file=sys.stderr)
+        return 1
+    print(f"{name} OK: {ok_detail}")
+    return 0

@@ -15,7 +15,6 @@ clock — that's the ``benchmarks.run --check-kernels`` CI gate.
 """
 from __future__ import annotations
 
-import json
 import os
 import time
 
@@ -265,29 +264,26 @@ def collect() -> dict:
 
 
 def write_bench(path: str = BENCH_PATH) -> dict:
-    payload = collect()
-    with open(path, "w") as f:
-        json.dump(payload, f, indent=1, sort_keys=True)
-        f.write("\n")
-    print(f"wrote {path}")
-    return payload
+    from benchmarks import gate
+
+    return gate.write_tracked(path, collect())
 
 
 def check_bench(path: str = BENCH_PATH) -> int:
     """The --check-kernels gate: structure + parity + coalescing counts.
     Wall-clock fields are required to EXIST but never compared."""
-    if not os.path.exists(path):
-        print(f"error: no tracked bench at {path}; run --update-kernels first")
+    from benchmarks import gate
+
+    tracked = gate.load_tracked(path, "--update-kernels")
+    if tracked is None:
         return 2
-    with open(path) as f:
-        tracked = json.load(f)
-    bad = 0
+    problems = []
 
     for kernel in ("distill_loss", "skr_rectify"):
         rec = tracked.get("batched_dispatch", {}).get(kernel)
         if not rec or not all(k in rec for k in ("serial_us", "batched_us")):
-            print(f"STRUCTURE {kernel}: missing batched/serial timings")
-            bad += 1
+            problems.append(
+                f"STRUCTURE {kernel}: missing batched/serial timings")
 
     parity = kernel_parity()
     for key, tol_key in (("distill_fwd_max_abs_err", "distill_fwd"),
@@ -295,29 +291,22 @@ def check_bench(path: str = BENCH_PATH) -> int:
                          ("skr_max_abs_err", "skr")):
         err, tol = parity[key], PARITY_TOL[tol_key]
         if err > tol:
-            print(f"PARITY {key}: {err:g} > {tol:g}")
-            bad += 1
+            problems.append(f"PARITY {key}: {err:g} > {tol:g}")
 
     want = tracked.get("flash_crowd", {})
     got = flash_crowd_counts(
         rounds=want.get("rounds", 2), clients=want.get("clients", 6),
         edges=want.get("edges", 3),
     )
-    if got != want:
-        print(f"COUNTS flash_crowd: tracked={want} current={got}")
-        bad += 1
+    problems += gate.diff_value("flash_crowd", want, got)
     if got["dispatches"] >= got["serial_pair_items"]:
-        print(f"COUNTS flash_crowd: {got['dispatches']} dispatches not "
-              f"below {got['serial_pair_items']} serial pair items")
-        bad += 1
+        problems.append(
+            f"COUNTS flash_crowd: {got['dispatches']} dispatches not "
+            f"below {got['serial_pair_items']} serial pair items")
     if got["batched_dispatches"] < 1:
-        print("COUNTS flash_crowd: no batched dispatch formed")
-        bad += 1
+        problems.append("COUNTS flash_crowd: no batched dispatch formed")
 
-    if bad:
-        print(f"\n{bad} kernel-bench check(s) failed. Re-baseline with "
-              "--update-kernels if the change is intentional.")
-        return 1
-    print(f"kernel bench OK: parity within tolerance, coalescing counts "
-          f"match {path}")
-    return 0
+    return gate.report(
+        "kernel bench", problems,
+        f"parity within tolerance, coalescing counts match {path}",
+        "--update-kernels")

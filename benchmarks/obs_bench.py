@@ -16,7 +16,6 @@ categories, and the gate attribution.
 """
 from __future__ import annotations
 
-import json
 import os
 
 BENCH_PATH = os.path.normpath(
@@ -85,40 +84,23 @@ def collect() -> dict:
 
 
 def write_bench(path: str = BENCH_PATH) -> dict:
-    payload = collect()
-    with open(path, "w") as f:
-        json.dump(payload, f, indent=1, sort_keys=True)
-        f.write("\n")
-    print(f"wrote {path}")
-    return payload
+    from benchmarks import gate
+
+    return gate.write_tracked(path, collect())
 
 
 def check_bench(path: str = BENCH_PATH) -> int:
     """The --check-obs gate: metric names, span categories, and the
     round-0 gate attribution must match the tracked file exactly."""
-    if not os.path.exists(path):
-        print(f"error: no tracked obs bench at {path}; run --update-obs "
-              "first")
+    from benchmarks import gate
+
+    tracked = gate.load_tracked(path, "--update-obs")
+    if tracked is None:
         return 2
-    with open(path) as f:
-        tracked = json.load(f)
-    got = collect()
-    bad = 0
-    for key in ("sim_metric_names", "global_metric_names",
-                "span_categories", "round0_gate"):
-        want, cur = tracked.get(key), got.get(key)
-        if want != cur:
-            bad += 1
-            if isinstance(want, list) and isinstance(cur, list):
-                missing = sorted(set(want) - set(cur))
-                added = sorted(set(cur) - set(want))
-                print(f"MISMATCH {key}: missing={missing} added={added}")
-            else:
-                print(f"MISMATCH {key}: tracked={want} current={cur}")
-    if bad:
-        print(f"\n{bad} obs check(s) failed. If the telemetry change is "
-              "intentional, re-baseline with --update-obs.")
-        return 1
-    print(f"obs bench OK: metric names, span categories, and gate "
-          f"attribution match {path}")
-    return 0
+    problems = gate.diff_keys(tracked, collect(),
+                              ("sim_metric_names", "global_metric_names",
+                               "span_categories", "round0_gate"))
+    return gate.report(
+        "obs bench", problems,
+        f"metric names, span categories, and gate attribution match {path}",
+        "--update-obs")

@@ -26,9 +26,7 @@ the ratio MODEL_FLOPS / step_FLOPs exposes remat/attention-rectangle waste.
 """
 from __future__ import annotations
 
-import dataclasses
 import json
-import math
 import os
 from dataclasses import replace
 

@@ -25,11 +25,18 @@ gate attribution) is tracked in ``BENCH_obs.json`` at the repo root:
 
   python -m benchmarks.run --check-obs     # CI gate
   python -m benchmarks.run --update-obs    # re-baseline
+
+The static-analysis contract (invariant rules + kernel resource table,
+see docs/static-analysis.md) is tracked in ``BENCH_analysis.json``:
+
+  python -m benchmarks.run --check-analysis    # CI gate
+  python -m benchmarks.run --update-analysis   # re-baseline
+
+All gates share the diff/report helpers in ``benchmarks.gate``.
 """
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import sys
 
@@ -39,38 +46,47 @@ TABLES_PATH = os.path.join(os.path.dirname(__file__), "tables",
                            "scenarios.json")
 
 
-def check_or_update_tables(update: bool) -> int:
-    """Diff fresh scenario event signatures against the tracked table
-    (``--check-tables``), or rewrite the table (``--update-tables``)."""
-    from benchmarks import fl_tables
+def write_tables(path: str = TABLES_PATH) -> dict:
+    from benchmarks import fl_tables, gate
 
-    sigs = fl_tables.scenario_signatures()
-    if update:
-        os.makedirs(os.path.dirname(TABLES_PATH), exist_ok=True)
-        with open(TABLES_PATH, "w") as f:
-            json.dump(sigs, f, indent=1, sort_keys=True)
-            f.write("\n")
-        print(f"wrote {len(sigs)} signatures to {TABLES_PATH}")
-        return 0
-    if not os.path.exists(TABLES_PATH):
-        print(f"error: no tracked table at {TABLES_PATH}; run "
-              "--update-tables first", file=sys.stderr)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    return gate.write_tracked(path, fl_tables.scenario_signatures())
+
+
+def check_tables(path: str = TABLES_PATH) -> int:
+    """Diff fresh scenario event signatures against the tracked table."""
+    from benchmarks import fl_tables, gate
+
+    tracked = gate.load_tracked(path, "--update-tables")
+    if tracked is None:
         return 2
-    with open(TABLES_PATH) as f:
-        tracked = json.load(f)
-    bad = 0
-    for key in sorted(set(tracked) | set(sigs)):
-        got, want = sigs.get(key), tracked.get(key)
-        if got != want:
-            bad += 1
-            print(f"MISMATCH {key}: tracked={want} current={got}")
-    if bad:
-        print(f"\n{bad} scenario signature(s) changed. If the scheduler "
-              "change is intentional, re-baseline with --update-tables.",
-              file=sys.stderr)
-        return 1
-    print(f"all {len(sigs)} scenario signatures match {TABLES_PATH}")
-    return 0
+    sigs = fl_tables.scenario_signatures()
+    return gate.report(
+        "scenario signatures", gate.diff_mapping(tracked, sigs),
+        f"all {len(sigs)} scenario signatures match {path}",
+        "--update-tables")
+
+
+def _gates():
+    """The --check-*/--update-* family: name -> (check_fn, update_fn)."""
+    from benchmarks import analysis_bench, kernel_bench, obs_bench
+
+    return {
+        "tables": (check_tables, write_tables),
+        "kernels": (kernel_bench.check_bench, kernel_bench.write_bench),
+        "obs": (obs_bench.check_bench, obs_bench.write_bench),
+        "analysis": (analysis_bench.check_bench, analysis_bench.write_bench),
+    }
+
+
+GATE_NAMES = ("tables", "kernels", "obs", "analysis")
+GATE_HELP = {
+    "tables": "scenario event signatures (benchmarks/tables/scenarios.json)",
+    "kernels": "BENCH_kernels.json structure, batched-kernel parity, "
+               "coalescing counts",
+    "obs": "BENCH_obs.json metric names, span categories, critical path",
+    "analysis": "static analysis + BENCH_analysis.json contract surface",
+}
 
 
 def roofline_rows():
@@ -103,39 +119,21 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default="")
-    ap.add_argument("--check-tables", action="store_true",
-                    help="diff scenario event signatures against "
-                         "benchmarks/tables/scenarios.json and exit")
-    ap.add_argument("--update-tables", action="store_true",
-                    help="re-baseline benchmarks/tables/scenarios.json")
-    ap.add_argument("--check-kernels", action="store_true",
-                    help="verify BENCH_kernels.json structure, batched-"
-                         "kernel parity, and coalescing counts, then exit")
-    ap.add_argument("--update-kernels", action="store_true",
-                    help="re-baseline BENCH_kernels.json (re-times batched "
-                         "vs serial dispatch on the current backend)")
-    ap.add_argument("--check-obs", action="store_true",
-                    help="verify BENCH_obs.json metric names, span "
-                         "categories, and critical-path gate, then exit")
-    ap.add_argument("--update-obs", action="store_true",
-                    help="re-baseline BENCH_obs.json")
+    for name in GATE_NAMES:
+        ap.add_argument(f"--check-{name}", action="store_true",
+                        help=f"gate: verify {GATE_HELP[name]}, then exit")
+        ap.add_argument(f"--update-{name}", action="store_true",
+                        help=f"re-baseline {GATE_HELP[name]}")
     args = ap.parse_args()
-    if args.check_tables or args.update_tables:
-        sys.exit(check_or_update_tables(args.update_tables))
-    if args.check_kernels or args.update_kernels:
-        from benchmarks import kernel_bench
-
-        if args.update_kernels:
-            kernel_bench.write_bench()
-            sys.exit(0)
-        sys.exit(kernel_bench.check_bench())
-    if args.check_obs or args.update_obs:
-        from benchmarks import obs_bench
-
-        if args.update_obs:
-            obs_bench.write_bench()
-            sys.exit(0)
-        sys.exit(obs_bench.check_bench())
+    for name in GATE_NAMES:
+        check = getattr(args, f"check_{name}")
+        update = getattr(args, f"update_{name}")
+        if check or update:
+            check_fn, update_fn = _gates()[name]
+            if update:
+                update_fn()
+                sys.exit(0)
+            sys.exit(check_fn())
     only = set(args.only.split(",")) if args.only else set(SUITES)
 
     from benchmarks import fl_tables, kernel_bench

@@ -14,7 +14,7 @@ from repro.configs import get_arch, reduced
 from repro.core.skr import skr_init, skr_process_batch
 from repro.kernels.ops import fused_distill_loss
 from repro.launch.steps import default_opts
-from repro.models import forward_prefill, init_params
+from repro.models import init_params
 from repro.models.transformer import _backbone, _embed_tokens, _logits_matrix
 from repro.models.layers import mask_padded_logits
 from repro.optim import adamw_init, adamw_update

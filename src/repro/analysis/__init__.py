@@ -1,0 +1,60 @@
+"""Repo-native static analysis: invariant linter + kernel contract analyzer.
+
+Two engines feed one :class:`~repro.analysis.findings.Finding` stream:
+
+* the AST rule framework (:mod:`repro.analysis.rules`,
+  :mod:`repro.analysis.visitor`) proves determinism and layering
+  invariants — rule IDs ``DET001``–``DET003``, ``ARCH001``–``ARCH002``,
+  ``OBS001``;
+* the kernel contract analyzer (:mod:`repro.analysis.kernel_contracts`)
+  proves Pallas resource contracts abstractly via ``jax.eval_shape`` —
+  rule IDs ``KRN001``–``KRN005``.
+
+Entry points: ``python -m repro.analysis`` (CLI, see ``--help``) and the
+``benchmarks.run --check-analysis`` gate. docs/static-analysis.md is the
+user-facing reference.
+"""
+from repro.analysis.findings import BASELINE_NAME, Baseline, Finding
+from repro.analysis.kernel_contracts import (
+    CONTRACTS,
+    DEFAULT_VMEM_BUDGET,
+    check_all,
+    contract_table,
+)
+from repro.analysis.rules import RULES, default_rules
+from repro.analysis.visitor import scan_source, scan_tree
+
+#: repo-relative path prefixes the AST engine scans by default
+DEFAULT_PATHS = ("src/repro",)
+
+
+def repo_root() -> str:
+    """The repo root, located from this package's position in src/."""
+    import os
+
+    here = os.path.dirname(os.path.abspath(__file__))
+    return os.path.dirname(os.path.dirname(os.path.dirname(here)))
+
+
+def run_analysis(
+    root: str | None = None,
+    paths: tuple[str, ...] = DEFAULT_PATHS,
+    kernels: bool = True,
+    bench_path: str | None = None,
+    vmem_budget: int = DEFAULT_VMEM_BUDGET,
+):
+    """Run both engines; returns ``(findings, suppressed)`` pre-baseline.
+
+    ``findings`` is the merged, deterministic-ordered stream; the caller
+    applies the baseline split (the CLI and the benchmark gate both do).
+    """
+    import os
+
+    root = repo_root() if root is None else root
+    findings, suppressed = scan_tree(root, list(paths), default_rules())
+    if kernels:
+        if bench_path is None:
+            bench_path = os.path.join(root, "BENCH_kernels.json")
+        findings = findings + check_all(bench_path, vmem_budget)
+        findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return findings, suppressed

@@ -1,0 +1,124 @@
+"""CLI for the repo-native static analysis.
+
+    python -m repro.analysis                 # scan + kernel contracts, exit 1 on new findings
+    python -m repro.analysis --explain DET001
+    python -m repro.analysis --json          # machine-readable finding stream
+    python -m repro.analysis --write-baseline  # grandfather current findings
+
+Exit code 0 means every finding is either inline-allowed or grandfathered
+in the baseline file (``analysis-baseline.json`` at the repo root — the
+acceptance state of this repo is an *empty* baseline).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+from repro.analysis import (
+    BASELINE_NAME,
+    DEFAULT_PATHS,
+    DEFAULT_VMEM_BUDGET,
+    Baseline,
+    repo_root,
+    run_analysis,
+)
+from repro.analysis.kernel_contracts import KRN_EXPLAIN
+from repro.analysis.rules import RULES
+
+
+def explain(rule_id: str) -> int:
+    rule_id = rule_id.upper()
+    if rule_id in RULES:
+        rule = RULES[rule_id]
+        print(f"{rule.id}: {rule.title}")
+        print(f"  scope: {', '.join(rule.scope)}"
+              + (f"  (exempt: {', '.join(rule.exempt)})" if rule.exempt else ""))
+        print()
+        for ln in rule.explain.splitlines():
+            print(f"  {ln}")
+        return 0
+    if rule_id in KRN_EXPLAIN:
+        print(f"{rule_id}: {KRN_EXPLAIN[rule_id]}")
+        print("  engine: kernel contracts (src/repro/analysis/kernel_contracts.py)")
+        return 0
+    known = sorted(RULES) + sorted(KRN_EXPLAIN)
+    print(f"unknown rule {rule_id!r}; known rules: {', '.join(known)}",
+          file=sys.stderr)
+    return 2
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Invariant linter + kernel contract analyzer "
+                    "(docs/static-analysis.md)",
+    )
+    ap.add_argument("--explain", metavar="RULE",
+                    help="print what a rule ID protects and exit")
+    ap.add_argument("--json", action="store_true",
+                    help="emit the finding stream as JSON")
+    ap.add_argument("--paths", nargs="+", default=list(DEFAULT_PATHS),
+                    help="repo-relative paths to scan (default: src/repro)")
+    ap.add_argument("--root", default=None,
+                    help="repo root (default: located from the package)")
+    ap.add_argument("--baseline", default=None,
+                    help=f"baseline file (default: <root>/{BASELINE_NAME})")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="grandfather all current findings into the baseline")
+    ap.add_argument("--no-kernels", action="store_true",
+                    help="skip the kernel contract engine (AST rules only)")
+    ap.add_argument("--vmem-budget-mib", type=float, default=None,
+                    help="kernel VMEM budget in MiB (default: "
+                         f"{DEFAULT_VMEM_BUDGET // (1024 * 1024)})")
+    args = ap.parse_args(argv)
+
+    if args.explain:
+        return explain(args.explain)
+
+    root = os.path.abspath(args.root) if args.root else repo_root()
+    budget = (int(args.vmem_budget_mib * 1024 * 1024)
+              if args.vmem_budget_mib is not None else DEFAULT_VMEM_BUDGET)
+    findings, suppressed = run_analysis(
+        root=root,
+        paths=tuple(args.paths),
+        kernels=not args.no_kernels,
+        vmem_budget=budget,
+    )
+
+    baseline_path = args.baseline or os.path.join(root, BASELINE_NAME)
+    if args.write_baseline:
+        bl = Baseline({f.key() for f in findings})
+        bl.save(baseline_path)
+        print(f"wrote {len(bl.keys)} grandfathered finding(s) to "
+              f"{baseline_path}")
+        return 0
+
+    baseline = Baseline.load(baseline_path)
+    new, grandfathered = baseline.split(findings)
+
+    if args.json:
+        print(json.dumps({
+            "new": [f.to_json() for f in new],
+            "grandfathered": [f.to_json() for f in grandfathered],
+            "suppressed": [f.to_json() for f in suppressed],
+        }, indent=1))
+        return 1 if new else 0
+
+    for f in new:
+        print(f.render())
+    tail = (f"{len(new)} finding(s)"
+            f", {len(grandfathered)} grandfathered"
+            f", {len(suppressed)} inline-allowed")
+    if new:
+        print(f"FAIL: {tail}", file=sys.stderr)
+        print("  (explain a rule: python -m repro.analysis --explain "
+              f"{new[0].rule})", file=sys.stderr)
+        return 1
+    print(f"OK: {tail}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

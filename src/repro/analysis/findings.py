@@ -1,0 +1,104 @@
+"""Finding stream + baseline file shared by both analysis engines.
+
+A :class:`Finding` is one rule violation (AST rule or kernel contract)
+pinned to a repo-relative path and line. Findings are grandfathered by a
+checked-in JSON baseline (``analysis-baseline.json`` at the repo root):
+a finding whose :meth:`Finding.key` appears in the baseline is reported
+as suppressed instead of failing the run. The acceptance state of the
+repo is an *empty* baseline — the file exists so a future refactor can
+land with known debt without turning the gate off.
+
+Inline suppression uses the annotation comment
+
+    some_call()  # analysis: allow[DET001]
+
+on the offending line or the line directly above it (multiple IDs are
+comma-separated). :func:`parse_allows` extracts the per-line allow sets
+from raw source so the AST visitors never re-scan text.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from dataclasses import dataclass, field
+
+_ALLOW_RE = re.compile(r"#\s*analysis:\s*allow\[([A-Z0-9_,\s]+)\]")
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One violation: ``rule`` is the stable ID (e.g. ``DET001``)."""
+
+    rule: str
+    path: str  # repo-relative, forward slashes
+    line: int
+    message: str
+    engine: str = "ast"  # "ast" | "kernel"
+
+    def key(self) -> str:
+        """Stable baseline key. Deliberately excludes the message text so
+        rewording a diagnostic doesn't invalidate a grandfathered entry."""
+        return f"{self.rule}:{self.path}:{self.line}"
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule} {self.message}"
+
+    def to_json(self) -> dict:
+        return {
+            "rule": self.rule,
+            "path": self.path,
+            "line": self.line,
+            "message": self.message,
+            "engine": self.engine,
+        }
+
+
+def parse_allows(source: str) -> dict[int, set[str]]:
+    """line number (1-based) -> rule IDs allowed on that line."""
+    allows: dict[int, set[str]] = {}
+    for i, text in enumerate(source.splitlines(), start=1):
+        m = _ALLOW_RE.search(text)
+        if m:
+            allows[i] = {r.strip() for r in m.group(1).split(",") if r.strip()}
+    return allows
+
+
+def is_allowed(finding: Finding, allows: dict[int, set[str]]) -> bool:
+    """An annotation suppresses a finding on its own line or the line
+    directly below it (i.e. the comment sits above the offending call)."""
+    for line in (finding.line, finding.line - 1):
+        if finding.rule in allows.get(line, set()):
+            return True
+    return False
+
+
+# ---------------------------------------------------------------------------
+# Baseline (grandfathered findings)
+# ---------------------------------------------------------------------------
+
+BASELINE_NAME = "analysis-baseline.json"
+
+
+@dataclass
+class Baseline:
+    keys: set[str] = field(default_factory=set)
+
+    @classmethod
+    def load(cls, path: str) -> "Baseline":
+        if not os.path.exists(path):
+            return cls()
+        with open(path) as f:
+            payload = json.load(f)
+        return cls(set(payload.get("findings", [])))
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump({"findings": sorted(self.keys)}, f, indent=1)
+            f.write("\n")
+
+    def split(self, findings: list[Finding]) -> tuple[list[Finding], list[Finding]]:
+        """(new, grandfathered) partition of ``findings``."""
+        new = [f for f in findings if f.key() not in self.keys]
+        old = [f for f in findings if f.key() in self.keys]
+        return new, old

@@ -12,8 +12,7 @@ Every assigned architecture registers itself in ``ARCH_REGISTRY`` via the
 """
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 from typing import Callable, Optional, Tuple
 
 # ---------------------------------------------------------------------------

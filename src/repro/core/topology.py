@@ -7,7 +7,7 @@ and leaves (end devices / clients). Node ids are strings; tiers are
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Callable, Iterator, Optional
+from typing import Callable, Iterator
 
 MigrateHook = Callable[[str, str, str], None]  # (node, old_parent, new_parent)
 

@@ -31,12 +31,12 @@ def _predict_fn(apply_fn):
 
 
 def accuracy(apply_fn, params, x, y, batch: int = 256) -> float:
-    t0 = time.perf_counter()
+    t0 = time.perf_counter()  # analysis: allow[DET001] host-side eval timing metric
     correct = 0
     fn = _predict_fn(apply_fn)
     for i in range(0, len(y), batch):
         pred = np.asarray(fn(params, jnp.asarray(x[i : i + batch])))
         correct += int((pred == y[i : i + batch]).sum())
     global_registry().histogram("fl_eval_wall_seconds").observe(
-        time.perf_counter() - t0)
+        time.perf_counter() - t0)  # analysis: allow[DET001]
     return correct / len(y)

@@ -24,7 +24,6 @@ Flags mirroring the §Perf hillclimb levers:
   --window-cache    ring-buffer caches for sliding-window layers
 """
 import argparse
-import dataclasses
 import json
 import re
 import sys

@@ -22,15 +22,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import save_pytree
-from repro.configs import INPUT_SHAPES, get_arch, list_archs, reduced
+from repro.configs import get_arch, list_archs, reduced
 from repro.configs.base import FLConfig
 from repro.data.loader import token_batches
 from repro.launch.mesh import make_host_mesh
 from repro.launch.steps import default_opts, make_train_step
 from repro.models import init_params
 from repro.optim import adamw_init
-from repro.sharding import batch_specs, param_specs
-from repro.sharding.specs import to_named
+from repro.sharding import param_specs
 
 
 def train_lm(arch: str, *, steps: int = 50, batch: int = 8, seq: int = 128,

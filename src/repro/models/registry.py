@@ -4,7 +4,6 @@ Each entry: name -> (init_fn(key, num_classes, image), apply_fn(params, x)).
 """
 from __future__ import annotations
 
-from functools import partial
 
 from repro.models.cnn import (
     apply_cnn,

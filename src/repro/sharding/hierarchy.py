@@ -20,7 +20,6 @@ Semantics (tested vs the flat global mean):
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 try:  # jax >= 0.6

@@ -14,7 +14,7 @@ rounds of a fast scenario or none of a slow one.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import numpy as np
 

@@ -10,7 +10,7 @@ mobility / scripted trace). Scenarios are frozen dataclasses so a
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 from typing import Tuple
 
 from repro.sim.network import (

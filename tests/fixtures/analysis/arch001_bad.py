@@ -1,0 +1,11 @@
+"""ARCH001 violation: raw Pallas / mesh APIs outside their shims."""
+import jax
+import jax.experimental.pallas.tpu as pltpu
+from jax.experimental import pallas as pl
+from jax.experimental.pallas.tpu import CompilerParams
+
+
+def launch(kernel, shape):
+    params = pltpu.CompilerParams(dimension_semantics=("parallel",))
+    mesh = jax.make_mesh(shape, ("dp",))
+    return pl.pallas_call(kernel), params, mesh, CompilerParams

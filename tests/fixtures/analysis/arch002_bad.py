@@ -1,0 +1,11 @@
+"""ARCH002 violation: duck-typed probing of the FLAlgorithm surface."""
+
+
+def dispatch(trainer, item, algos):
+    if hasattr(trainer, "execute_batch"):
+        return trainer.execute_batch([item])
+    if isinstance(trainer, algos.FedEEC):
+        return trainer.execute(item)
+    if isinstance(trainer, (algos.FlatFedAvg, dict)):
+        return None
+    return trainer.execute(item)

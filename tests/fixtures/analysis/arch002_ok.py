@@ -1,0 +1,10 @@
+"""ARCH002 clean: dispatch through the declared FLAlgorithm surface."""
+
+
+def dispatch(trainer, item):
+    # probing unrelated attributes is fine; the rule guards the API surface
+    if hasattr(trainer, "debug_label"):
+        print(trainer.debug_label)
+    if isinstance(item, dict):
+        item = item["work"]
+    return trainer.execute(item)

@@ -1,0 +1,11 @@
+"""DET001 violation: wall-clock reads in signature-bearing code."""
+import time
+from datetime import datetime
+from time import perf_counter
+
+
+def schedule(event):
+    stamp = time.time()
+    tick = perf_counter()
+    day = datetime.now()
+    return stamp, tick, day, event

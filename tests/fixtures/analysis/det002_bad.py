@@ -1,0 +1,12 @@
+"""DET002 violation: process-global / unseeded randomness."""
+import random
+
+import numpy as np
+
+
+def draw():
+    a = random.random()
+    b = np.random.normal(size=3)
+    np.random.seed(0)
+    rng = np.random.default_rng()
+    return a, b, rng

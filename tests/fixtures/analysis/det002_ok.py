@@ -1,0 +1,8 @@
+"""DET002 clean: all randomness flows from an explicit seed."""
+import numpy as np
+
+
+def draw(seed: int):
+    rng = np.random.default_rng(seed)
+    child = np.random.default_rng(np.random.SeedSequence(seed))
+    return rng.normal(size=3), child.integers(0, 10)

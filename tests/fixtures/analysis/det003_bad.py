@@ -1,0 +1,9 @@
+"""DET003 violation: hash/insertion-ordered iteration feeding emission."""
+
+
+def emit_all(devices, table, emit):
+    for dev in set(devices):
+        emit(dev)
+    for dev in {d for d in devices if d.online}:
+        emit(dev)
+    return [table[k] for k in table.keys()]

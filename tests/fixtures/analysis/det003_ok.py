@@ -1,0 +1,7 @@
+"""DET003 clean: iteration order pinned with sorted(...)."""
+
+
+def emit_all(devices, table, emit):
+    for dev in sorted(set(devices)):
+        emit(dev)
+    return [table[k] for k in sorted(table)]

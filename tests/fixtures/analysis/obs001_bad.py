@@ -1,0 +1,11 @@
+"""OBS001 violation: tracer call sites without the None guard."""
+from repro.obs.trace import active_tracer
+
+
+def run(fn, tracer):
+    tr = active_tracer()
+    with tr.span("round", cat="sim"):
+        out = fn()
+    tracer.instant("done")
+    tr.add_span("post", 0.0, 1.0)
+    return out

@@ -1,0 +1,29 @@
+"""OBS001 clean: all three guard idioms from docs/observability.md."""
+from contextlib import nullcontext
+
+from repro.obs.trace import active_tracer
+
+
+def run_early_exit(fn):
+    tr = active_tracer()
+    if tr is None:
+        return fn()
+    with tr.span("round", cat="sim"):
+        return fn()
+
+
+def run_ifexp(fn):
+    tr = active_tracer()
+    with (tr.span("round", cat="sim") if tr is not None else nullcontext()):
+        return fn()
+
+
+def run_block(fn, tracer):
+    out = fn()
+    if tracer is not None:
+        tracer.instant("done")
+        tracer.add_span("post", 0.0, 1.0)
+    # CommMeter spans are not tracer spans — must not be flagged
+    with fn.comm.span("up"):
+        pass
+    return out

@@ -3,7 +3,6 @@ paths, protocol-gated migration (Theorems 1-2), participation masks,
 work-item decomposition, and the bounded autoencoder cache."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.configs.base import FLConfig
@@ -12,7 +11,6 @@ from repro.fl.api import (
     ALGORITHM_REGISTRY,
     FLAlgorithm,
     MigrationRefused,
-    WorkItem,
     create_algorithm,
     list_algorithms,
     register_algorithm,

@@ -3,10 +3,7 @@ import os
 import subprocess
 import sys
 
-import jax
 import jax.numpy as jnp
-import numpy as np
-import pytest
 
 from repro.sharding.hierarchy import hier_grad_mean
 

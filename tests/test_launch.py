@@ -6,7 +6,6 @@ import subprocess
 import sys
 
 import numpy as np
-import pytest
 
 
 def test_train_lm_loss_decreases():

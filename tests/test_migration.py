@@ -1,6 +1,5 @@
 """Migration edge cases (§IV-E): cycle refusal, whole-subtree moves,
 repeated migrations, comm charging, and the single-edge engine demo."""
-import numpy as np
 import pytest
 
 from repro.configs.base import FLConfig

@@ -9,9 +9,9 @@ hypothesis = pytest.importorskip(
 )
 from hypothesis import given, settings, strategies as st
 
-from repro.core.bsbodp import kl_div, non_leaf_loss, softmax_xent
+from repro.core.bsbodp import kl_div, non_leaf_loss
 from repro.core.protocols import aggregate_params
-from repro.core.skr import queue_means, rectify_given_qbar, skr_init, skr_process_batch
+from repro.core.skr import rectify_given_qbar, skr_init, skr_process_batch
 from repro.data.partition import dirichlet_partition
 
 SETTINGS = dict(max_examples=25, deadline=None)

@@ -1,6 +1,5 @@
 """Discrete-event simulator: queue ordering, network pricing, churn
 determinism, scenario registry, and end-to-end simulated FL runs."""
-import numpy as np
 import pytest
 
 from repro.core.topology import Tree
