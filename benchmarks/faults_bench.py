@@ -1,0 +1,94 @@
+"""Fault-plane regression file: the chaos scenarios' stability contract.
+
+``collect()`` runs FedEEC through each fault-bearing scenario with the
+simulator's gate-sized problem (same shape as
+``fl_tables.scenario_signatures``: no eval, pure scheduling) and records
+
+* the **event signature** — the full fault/retry/recovery schedule is a
+  pure function of (scenario, seed, fault plan), so this is bit-stable,
+* the **fault counters** (failures, retries, abandoned, timeouts,
+  departures, outages, flaps) — the coarse shape of the injected chaos,
+* the scenario's **fault plan** name.
+
+Everything lands in the tracked ``BENCH_faults.json`` at the repo root;
+``check_bench()`` recomputes and diffs — that's the ``benchmarks.run
+--check-faults`` CI gate. Wall-clock is never compared.
+"""
+from __future__ import annotations
+
+import os
+
+BENCH_PATH = os.path.normpath(
+    os.path.join(os.path.dirname(__file__), "..", "BENCH_faults.json")
+)
+
+#: the fault-bearing scenarios the gate covers
+SCENARIOS = ("lossy_links", "regional_outage", "byzantine_noise")
+
+#: fault-plane counters tracked per scenario (docs/robustness.md)
+COUNTERS = (
+    "sim_transfer_failures_total",
+    "sim_transfer_retries_total",
+    "sim_pairs_abandoned_total",
+    "sim_pair_timeouts_total",
+    "sim_departures_total",
+    "sim_regional_outages_total",
+    "sim_link_flaps_total",
+)
+
+
+def _run(scenario: str, rounds: int = 2, clients: int = 4, edges: int = 2):
+    """One FedEEC run through ``scenario`` (no eval); returns the engine."""
+    from repro.configs.fedeec_paper import paper_setting
+    from repro.fl.api import create_algorithm
+    from repro.fl.engine import build_problem
+    from repro.sim.engine import SimEngine
+    from repro.sim.scenarios import get_scenario
+
+    cfg = paper_setting(
+        "synth_cifar10", clients, edges, samples_per_client=16,
+        test_samples=64, image_size=8, embed_dim=16,
+        edge_model="cnn2", cloud_model="cnn2",
+    )
+    _, tree, client_data, auto = build_problem(cfg)
+    trainer = create_algorithm("fedeec", cfg, tree, client_data, auto)
+    engine = SimEngine(trainer, get_scenario(scenario), seed=cfg.seed)
+    engine.run(rounds)
+    return engine
+
+
+def collect() -> dict:
+    out: dict[str, dict] = {}
+    for name in SCENARIOS:
+        engine = _run(name)
+        snap = engine.metrics.snapshot()
+        rec = {
+            "signature": engine.log.signature(),
+            "fault_plan": engine.fault_plan.name if engine.fault_plan else "",
+        }
+        for c in COUNTERS:
+            rec[c] = int(snap.get(c, {}).get("value", 0))
+        out[name] = rec
+    return out
+
+
+def write_bench(path: str = BENCH_PATH) -> dict:
+    from benchmarks import gate
+
+    return gate.write_tracked(path, collect())
+
+
+def check_bench(path: str = BENCH_PATH) -> int:
+    """The --check-faults gate: per-scenario fault schedule signatures and
+    counters must match the tracked file exactly."""
+    from benchmarks import gate
+
+    tracked = gate.load_tracked(path, "--update-faults")
+    if tracked is None:
+        return 2
+    problems = gate.diff_mapping(tracked, collect())
+    return gate.report(
+        "faults bench", problems,
+        f"fault signatures and counters for {len(SCENARIOS)} chaos "
+        f"scenarios match {path}",
+        "--update-faults")

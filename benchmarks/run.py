@@ -32,6 +32,12 @@ see docs/static-analysis.md) is tracked in ``BENCH_analysis.json``:
   python -m benchmarks.run --check-analysis    # CI gate
   python -m benchmarks.run --update-analysis   # re-baseline
 
+The fault-plane contract (chaos-scenario event signatures + fault
+counters, see docs/robustness.md) is tracked in ``BENCH_faults.json``:
+
+  python -m benchmarks.run --check-faults    # CI gate
+  python -m benchmarks.run --update-faults   # re-baseline
+
 All gates share the diff/report helpers in ``benchmarks.gate``.
 """
 from __future__ import annotations
@@ -69,23 +75,25 @@ def check_tables(path: str = TABLES_PATH) -> int:
 
 def _gates():
     """The --check-*/--update-* family: name -> (check_fn, update_fn)."""
-    from benchmarks import analysis_bench, kernel_bench, obs_bench
+    from benchmarks import analysis_bench, faults_bench, kernel_bench, obs_bench
 
     return {
         "tables": (check_tables, write_tables),
         "kernels": (kernel_bench.check_bench, kernel_bench.write_bench),
         "obs": (obs_bench.check_bench, obs_bench.write_bench),
         "analysis": (analysis_bench.check_bench, analysis_bench.write_bench),
+        "faults": (faults_bench.check_bench, faults_bench.write_bench),
     }
 
 
-GATE_NAMES = ("tables", "kernels", "obs", "analysis")
+GATE_NAMES = ("tables", "kernels", "obs", "analysis", "faults")
 GATE_HELP = {
     "tables": "scenario event signatures (benchmarks/tables/scenarios.json)",
     "kernels": "BENCH_kernels.json structure, batched-kernel parity, "
                "coalescing counts",
     "obs": "BENCH_obs.json metric names, span categories, critical path",
     "analysis": "static analysis + BENCH_analysis.json contract surface",
+    "faults": "BENCH_faults.json chaos-scenario fault signatures + counters",
 }
 
 

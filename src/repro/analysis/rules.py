@@ -208,6 +208,51 @@ class Det003UnorderedIteration(Rule):
                 )
 
 
+@register_rule
+class Det004FaultStreamConstruction(Rule):
+    id = "DET004"
+    title = "simulator RNGs are constructed once, in __init__"
+    scope = ("src/repro/sim/",)
+    explain = (
+        "Fault/churn/network randomness must come from streams owned by a\n"
+        "process object and built exactly once in its __init__ (see\n"
+        "FaultProcess: one SeedSequence-derived Generator per concern).\n"
+        "Constructing a Generator inside a draw path — default_rng(...),\n"
+        "SeedSequence(...), PCG64/Philox(...) in loss_prob, draw_round,\n"
+        "plan_attempts, module level, ... — re-keys the stream per call, so\n"
+        "the schedule of fault events stops being a pure function of\n"
+        "(scenario, seed, plan) and checkpoint-resume (which snapshots the\n"
+        "streams' bit-generator state) can no longer replay it. Pre-run\n"
+        "one-shot derivations (e.g. byzantine label noise applied before the\n"
+        "engine exists) are the deliberate exception — annotate them with\n"
+        "`# analysis: allow[DET004]`."
+    )
+
+    _CTORS = {
+        "numpy.random.default_rng", "numpy.random.Generator",
+        "numpy.random.SeedSequence", "numpy.random.PCG64",
+        "numpy.random.Philox",
+    }
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = canonical(ctx, node.func)
+            if name not in self._CTORS:
+                continue
+            fn = ctx.enclosing_function(node)
+            if fn is not None and fn.name == "__init__":
+                continue
+            where = f"in `{fn.name}`" if fn is not None else "at module level"
+            yield self.finding(
+                ctx, node,
+                f"`{name}` constructed {where}; simulator RNG streams are "
+                "built once in __init__ so fault schedules replay "
+                "bit-identically (checkpoint-resume snapshots their state)",
+            )
+
+
 # ---------------------------------------------------------------------------
 # ARCH — layering (shim routing + registry-only dispatch)
 # ---------------------------------------------------------------------------
@@ -300,7 +345,8 @@ class Arch002DuckProbing(Rule):
         "work_items", "execute", "execute_batch", "batch_signature",
         "begin_round", "end_round", "set_participation", "participates",
         "train_round", "migrate", "try_migrate", "on_migrate_refused",
-        "cloud_params", "cloud_apply",
+        "cloud_params", "cloud_apply", "on_item_failed",
+        "state_arrays", "state_meta", "load_state",
     })
     _ALGO_TYPES = frozenset({
         "FLAlgorithm", "FedEEC", "HierarchicalFedAvg", "FlatFedAvg",

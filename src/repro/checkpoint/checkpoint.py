@@ -37,17 +37,29 @@ def _flatten(tree: Any, prefix: str = "") -> dict[str, Any]:
 
 
 def save_pytree(path: str, tree: Any) -> None:
-    import jax.numpy as jnp
-
+    """Crash-safe atomic write: serialize to a temp file in the target
+    directory, fsync, then ``os.replace`` into place. An interrupted save
+    (mid-write failure, kill, full disk) can never leave a truncated
+    checkpoint at ``path`` — the old file survives untouched and the temp
+    file is cleaned up."""
     host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
     flat = _flatten(host_tree)
     payload = msgpack.packb(flat, use_bin_type=True)
     d = os.path.dirname(os.path.abspath(path))
     os.makedirs(d, exist_ok=True)
-    with tempfile.NamedTemporaryFile(dir=d, delete=False) as f:
-        f.write(payload)
-        tmp = f.name
-    os.replace(tmp, path)
+    fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            f.write(payload)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
 
 
 def load_pytree(path: str) -> Any:

@@ -84,6 +84,9 @@ class FedEEC(FLAlgorithm):
         self.client_data = client_data
         self.embeddings: dict[str, tuple[np.ndarray, np.ndarray]] = {}
         self._step_cache: dict = {}
+        # (node, peer, reason) of BSBODP pairs lost to faults — the
+        # knowledge that never agglomerated (docs/robustness.md)
+        self.failed_pairs: list[tuple[str, str, str]] = []
         self._init_phase()
 
     # ------------------------------------------------------------------ init
@@ -377,6 +380,46 @@ class FedEEC(FLAlgorithm):
         pairs = [(it.node, it.peer) for it in items]
         self._bsbodp_directional_batched([(v, p) for v, p in pairs])
         self._bsbodp_directional_batched([(p, v) for v, p in pairs])
+
+    def on_item_failed(self, item: WorkItem, reason: str) -> None:
+        """A BSBODP pair was lost to faults. The pair never executed:
+        neither direction distilled and the teacher's SKR queue never saw
+        the bridge batch, so the pair is excluded from this round's
+        agglomeration weights by construction — SKR's queue-frequency
+        weighting (Eq. 8) only ever counts batches that arrived. Record
+        the loss so tests and operators can see what went missing."""
+        self.failed_pairs.append((item.node, item.peer, reason))
+
+    # -- checkpoint state (docs/robustness.md) ------------------------------
+
+    def state_arrays(self):
+        return {
+            "params": self.params,
+            "opt": self.opt,
+            "skr": self.skr,
+            "embeddings": self.embeddings,
+        }
+
+    def state_meta(self) -> dict:
+        meta = super().state_meta()
+        meta["rng"] = self.rng.bit_generator.state
+        meta["failed_pairs"] = [list(t) for t in self.failed_pairs]
+        return meta
+
+    def load_state(self, meta: dict, arrays) -> None:
+        super().load_state(meta, arrays)
+        self.rng.bit_generator.state = meta["rng"]
+        self.failed_pairs = [
+            (str(a), str(b), str(c)) for a, b, c in meta["failed_pairs"]
+        ]
+        self.params = arrays["params"]
+        self.opt = arrays["opt"]
+        self.skr = arrays["skr"]
+        # embedding stores are host-side numpy (indexed by the rng draws)
+        self.embeddings = {
+            v: (np.asarray(e), np.asarray(y))
+            for v, (e, y) in arrays["embeddings"].items()
+        }
 
     def _model_params(self, node: str):
         return self.params[node]

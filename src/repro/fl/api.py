@@ -122,6 +122,34 @@ class FLAlgorithm(ABC):
     def end_round(self, round: int) -> None:
         """Post-round barrier across items (e.g. cloud aggregation)."""
 
+    def on_item_failed(self, item: WorkItem, reason: str) -> None:
+        """A scheduled item was lost to faults (``reason`` in
+        {"abandoned", "timeout", "departed"} — docs/robustness.md). The
+        item was NEVER executed: its transfer attempts all failed, so no
+        state or comm traffic exists to roll back. Overrides record the
+        loss and keep the item out of this round's aggregation weights;
+        the default is a no-op because an unexecuted item contributes
+        nothing anyway (graceful degradation by construction)."""
+
+    # -- checkpoint state (repro.checkpoint; docs/robustness.md) -----------
+
+    def state_arrays(self):
+        """Array pytree of the trainer's resumable state, serialized via
+        ``repro.checkpoint.save_pytree``. Pair with :meth:`state_meta`."""
+        return {}
+
+    def state_meta(self) -> dict:
+        """JSON-serializable non-array state (round counters, numpy
+        generator states — whose >64-bit ints msgpack cannot hold)."""
+        return {"round": self._round}
+
+    def load_state(self, meta: dict, arrays) -> None:
+        """Restore from :meth:`state_meta` / :meth:`state_arrays` output.
+        Overrides must restore *every* field their ``state_*`` methods
+        saved — a resumed run's event signature must be bit-identical to
+        an uninterrupted one."""
+        self._round = int(meta.get("round", 0))
+
     # -- participation ------------------------------------------------------
 
     def set_participation(self, mask: Optional[Iterable[str]]) -> None:

@@ -228,6 +228,43 @@ class HierarchicalFedAvg(FLAlgorithm):
         # edge <-> cloud parameter exchange
         self.comm.record(item.link, 2 * self._nfloats, "params")
 
+    def on_item_failed(self, item: WorkItem, reason: str) -> None:
+        """Drop the lost participant from the FedAvg weight vector. A
+        failed item never executed, so normally nothing is staged — the
+        clean-up below is defensive (covers subclasses that stage state
+        eagerly) and makes the degradation rule explicit: a lost "local"
+        item removes that client from its edge's weights; a lost
+        "aggregate" item zeroes the edge out of the cloud aggregation."""
+        if item.kind == "local":
+            ups = self._round_updates.get(item.peer)
+            if ups:
+                self._round_updates[item.peer] = [
+                    (c, p) for c, p in ups if c != item.node
+                ]
+        elif item.kind == "aggregate":
+            self._edge_params.pop(item.node, None)
+            self._edge_weight[item.node] = 0.0
+
+    # -- checkpoint state (docs/robustness.md) ------------------------------
+
+    def state_arrays(self):
+        arrays = {"global": self.global_params, "opt": self.opt}
+        if self._momentum_buf is not None:
+            arrays["momentum"] = self._momentum_buf
+        return arrays
+
+    def state_meta(self) -> dict:
+        meta = super().state_meta()
+        meta["rng"] = self.rng.bit_generator.state
+        return meta
+
+    def load_state(self, meta: dict, arrays) -> None:
+        super().load_state(meta, arrays)
+        self.rng.bit_generator.state = meta["rng"]
+        self.global_params = arrays["global"]
+        self.opt = arrays["opt"]
+        self._momentum_buf = arrays.get("momentum")
+
     def end_round(self, round: int) -> None:
         """Cloud aggregation barrier: only edges whose subtree actually
         trained this round carry weight, so dropout changes the aggregate."""

@@ -140,6 +140,11 @@ def run_experiment(
     migration_round: int | None = None,
     scenario=None,
     tracer=None,
+    faults=None,
+    checkpoint_every: int = 0,
+    checkpoint_dir: str = "",
+    resume_from: str = "",
+    stop_after: int | None = None,
 ) -> RunResult:
     """Run ``algorithm`` for R rounds.
 
@@ -148,19 +153,47 @@ def run_experiment(
     event-driven simulated-network path. ``tracer`` (a
     ``repro.obs.trace.Tracer``) records hierarchical spans of the run —
     it is installed as the active tracer so kernel/eval spans nest too.
+
+    Fault plane (docs/robustness.md, sim path only): ``faults`` (a
+    ``FaultPlan`` or plan name) overrides the scenario's plan; byzantine
+    plans rewrite client labels BEFORE trainer construction so FedEEC's
+    embedding stores see the noise. ``checkpoint_every``/``checkpoint_dir``
+    snapshot the engine every N rounds; ``resume_from`` restores a
+    snapshot and continues — bit-identical to an uninterrupted run;
+    ``stop_after`` ends the run early (simulating a kill, no final eval).
     """
     from repro.obs.trace import tracing
 
+    scenario = scenario if scenario is not None else (cfg.scenario or None)
+    sc = None
+    if scenario is not None:
+        from repro.sim.scenarios import get_scenario
+
+        sc = get_scenario(scenario) if isinstance(scenario, str) else scenario
+    if isinstance(faults, str):
+        from repro.sim.faults import get_fault_plan
+
+        faults = get_fault_plan(faults)
+    plan = faults if faults is not None else (
+        sc.faults if sc is not None else None)
+
     ds, tree, client_data, auto = build_problem(cfg)
+    if plan is not None and plan.label_noise_frac > 0:
+        from repro.sim.faults import apply_label_noise
+
+        client_data, _ = apply_label_noise(
+            plan, client_data, cfg.seed, cfg.num_classes)
     trainer = create_algorithm(algorithm, cfg, tree, client_data, auto)
     rounds = rounds if rounds is not None else cfg.rounds
     res = RunResult(algorithm, cfg)
-    scenario = scenario if scenario is not None else (cfg.scenario or None)
     t0 = time.time()  # analysis: allow[DET001] host-only wall_s, not in event log
     with tracing(tracer):
-        if scenario is not None:
-            _run_simulated(trainer, scenario, cfg, ds, res, rounds,
-                           eval_every, verbose, tracer)
+        if sc is not None:
+            _run_simulated(trainer, sc, cfg, ds, res, rounds,
+                           eval_every, verbose, tracer, faults=faults,
+                           checkpoint_every=checkpoint_every,
+                           checkpoint_dir=checkpoint_dir,
+                           resume_from=resume_from, stop_after=stop_after)
         else:
             _run_plain(trainer, algorithm, ds, res, rounds, eval_every,
                        verbose, migration_round)
@@ -203,18 +236,24 @@ def _run_plain(trainer, algorithm, ds, res, rounds, eval_every, verbose,
 
 
 def _run_simulated(trainer, scenario, cfg, ds, res, rounds, eval_every,
-                   verbose, tracer=None):
+                   verbose, tracer=None, *, faults=None, checkpoint_every=0,
+                   checkpoint_dir="", resume_from="", stop_after=None):
     from repro.sim.engine import SimEngine
     from repro.sim.scenarios import get_scenario
 
     sc = get_scenario(scenario) if isinstance(scenario, str) else scenario
-    engine = SimEngine(trainer, sc, seed=cfg.seed, tracer=tracer)
+    engine = SimEngine(trainer, sc, seed=cfg.seed, tracer=tracer,
+                       faults=faults)
+    if resume_from:
+        engine.restore_checkpoint(resume_from)
 
     def eval_fn():
         return accuracy(trainer.cloud_apply(), trainer.cloud_params(),
                         ds.x_test, ds.y_test)
 
-    log = engine.run(rounds, eval_fn=eval_fn, eval_every=eval_every)
+    log = engine.run(rounds, eval_fn=eval_fn, eval_every=eval_every,
+                     checkpoint_every=checkpoint_every,
+                     checkpoint_path=checkpoint_dir, stop_after=stop_after)
     res.scenario = sc.name
     for t, acc in engine.acc_points:
         res.sim_times.append(t)

@@ -43,6 +43,8 @@ class Item:
     transfer_s: float | None = None  # trace-only
     straggle: float = 1.0  # compute factor of the slowest participant
     straggle_node: str = ""  # which participant that is (when > 1)
+    retries: int = 0  # fault-plane transfer retries absorbed by this item
+    retry_wait_s: float = 0.0  # backoff wait inside the interval (trace-only)
 
     @property
     def dur(self) -> float:
@@ -61,7 +63,7 @@ class RoundReport:
     path: list[Item] = field(default_factory=list)  # first -> last
     gate: Item | None = None
     gate_node: str = ""
-    gate_factor: str = ""  # straggle | compute | transfer | compute+transfer
+    gate_factor: str = ""  # retry | straggle | compute | transfer | compute+transfer
     start_delay: float = 0.0  # path head started after t0 (migration busy)
     slack: list[float] = field(default_factory=list)  # off-path end slack
 
@@ -102,7 +104,8 @@ def rounds_from_eventlog(entries: list[dict]) -> list[RoundReport]:
             key = (e["node"], e.get("target", ""))
             start = open_items.pop(key, e["t"] - e.get("dur", 0.0))
             it = Item(node=key[0], peer=key[1], start=start, end=e["t"],
-                      bytes=e.get("bytes", 0.0))
+                      bytes=e.get("bytes", 0.0),
+                      retries=int(e.get("retries", 0)))
             for v in sorted(it.participants()):
                 if stragglers.get(v, 1.0) > it.straggle:
                     it.straggle = stragglers[v]
@@ -140,6 +143,8 @@ def rounds_from_trace(trace: dict) -> list[RoundReport]:
                 transfer_s=args.get("transfer_s"),
                 straggle=args.get("straggle", 1.0),
                 straggle_node=args.get("straggle_node", ""),
+                retries=int(args.get("retries", 0)),
+                retry_wait_s=args.get("retry_wait_s", 0.0),
             )
             rep.items.append(it)
             rep.t_end = max(rep.t_end, it.end)
@@ -193,10 +198,20 @@ def _analyze(rep: RoundReport) -> None:
 
 
 def _factor(it: Item) -> str:
+    if it.compute_s is not None and it.transfer_s is not None:
+        # trace path: exact split — retry gates only when backoff wait
+        # dominates both the compute and transfer legs
+        if it.retry_wait_s > max(it.compute_s, it.transfer_s):
+            return "retry"
+        if it.straggle > 1.0:
+            return "straggle"
+        return "transfer" if it.transfer_s > it.compute_s else "compute"
     if it.straggle > 1.0:
         return "straggle"
-    if it.compute_s is not None and it.transfer_s is not None:
-        return "transfer" if it.transfer_s > it.compute_s else "compute"
+    if it.retries > 0:
+        # event-log path: the backoff wait is folded into the interval and
+        # can't be split out, so any retried gate reports as retry-bound
+        return "retry"
     return "compute+transfer"
 
 
@@ -230,6 +245,10 @@ def explain(reports: list[RoundReport]) -> str:
                          f" transfer {it.transfer_s:.3f}s")
             if it.straggle > 1.0:
                 extra += f"  straggle x{it.straggle:g}"
+            if it.retries:
+                extra += f"  retries {it.retries}"
+                if it.retry_wait_s > 0:
+                    extra += f" (wait {it.retry_wait_s:.3f}s)"
             lines.append(
                 f"    [{_factor(it):>16}] {it.kind} {it.node}->{it.peer}"
                 f"   start {it.start - rep.t0:8.3f}  dur {it.dur:8.3f}"

@@ -5,6 +5,9 @@ Layers:
   * ``events``    — deterministic event queue + structured event log.
   * ``network``   — per-tier link latency/bandwidth models.
   * ``churn``     — node lifecycle (dropout/rejoin), stragglers, mobility.
+  * ``faults``    — seeded fault injection: lossy transfers with
+                    retry/backoff, link flaps, regional outages,
+                    departures, byzantine label noise.
   * ``scenarios`` — ``ScenarioConfig`` + named scenario registry.
   * ``engine``    — event-driven rounds over any ``FLAlgorithm``'s work
                     items (``repro.fl.api``): BSBODP pairs for FedEEC,
@@ -13,6 +16,14 @@ Layers:
   * ``runner``    — CLI: ``python -m repro.sim.runner --scenario ...``.
 """
 from repro.sim.events import Event, EventLog, EventQueue  # noqa: F401
+from repro.sim.faults import (  # noqa: F401
+    FAULT_PLANS,
+    FaultPlan,
+    FaultProcess,
+    get_fault_plan,
+    list_fault_plans,
+    register_fault_plan,
+)
 from repro.sim.network import LinkSpec, NetworkModel  # noqa: F401
 from repro.sim.scenarios import (  # noqa: F401
     SCENARIOS,

@@ -33,8 +33,14 @@ from repro.obs.metrics import MetricsRegistry
 from repro.obs.trace import Tracer
 from repro.sim.churn import ChurnProcess
 from repro.sim.events import EventLog, EventQueue
+from repro.sim.faults import AttemptSchedule, FaultPlan, FaultProcess
 from repro.sim.network import NetworkModel
 from repro.sim.scenarios import ScenarioConfig
+
+# event kinds that resolve a scheduled item and release its dependents —
+# the degradation contract: a faulted item still unblocks its parent (at
+# the instant its fate is sealed), so the dependency graph never deadlocks
+TERMINAL_KINDS = ("pair_done", "pair_abandoned", "pair_timeout")
 
 
 def plan_groups(items, signature_of):
@@ -82,6 +88,7 @@ class SimEngine:
         seed: int = 0,
         tracer: Optional[Tracer] = None,
         metrics: Optional[MetricsRegistry] = None,
+        faults: Optional[FaultPlan] = None,
     ):
         self.trainer = trainer
         self.tree = trainer.tree
@@ -94,10 +101,21 @@ class SimEngine:
             seed=seed + 1,
         )
         self.churn = ChurnProcess(self.tree, scenario, seed=seed + 2)
+        # fault plane (docs/robustness.md): an explicit ``faults`` plan
+        # overrides the scenario's; an absent or inactive plan keeps the
+        # engine on the fault-free path — no fault stream is ever touched
+        # and signatures match pre-fault builds bit-for-bit
+        self.fault_plan = faults if faults is not None else scenario.faults
+        self.faults = (
+            FaultProcess(self.tree, self.fault_plan, seed=seed + 3)
+            if self.fault_plan is not None and self.fault_plan.active()
+            else None
+        )
         self.queue = EventQueue()
         self.log = EventLog()
         self.now = 0.0
         self.acc_points: list[tuple[float, float]] = []  # (sim_s, acc)
+        self._round_next = 0  # first round run() will execute (resume point)
         self._in_migrate = False
         # log migrations initiated by the trainer itself (e.g. DemLearn's
         # self-organizing re-clustering), not just by the churn process
@@ -112,7 +130,11 @@ class SimEngine:
                      "sim_batched_dispatches_total",
                      "sim_batched_items_total", "sim_migrate_refused_total",
                      "sim_migrations_total", "sim_dropouts_total",
-                     "sim_rejoins_total"):
+                     "sim_rejoins_total", "sim_transfer_failures_total",
+                     "sim_transfer_retries_total",
+                     "sim_pairs_abandoned_total", "sim_pair_timeouts_total",
+                     "sim_departures_total", "sim_regional_outages_total",
+                     "sim_link_flaps_total", "sim_checkpoints_total"):
             self.metrics.counter(name)
         self.metrics.histogram("sim_queue_depth",
                                buckets=(1, 2, 4, 8, 16, 32, 64, 128))
@@ -213,7 +235,41 @@ class SimEngine:
                     self.tracer.instant("rejoin", sim_t=self.now,
                                         node=act.node)
                 self.log.note(self.now, "rejoin", node=act.node)
+        if self.faults is not None:
+            self._round_faults(r)
         return busy
+
+    def _round_faults(self, r: int) -> None:
+        """Apply this round's regional outages and link flaps. Outages
+        write into ``churn.offline_until`` — the edge and all its current
+        children drop together, and the churn process's ordinary rejoin
+        sweep recovers them when the window expires."""
+        m = self.metrics.counter
+        for fa in self.faults.draw_round(r, self.now, self.churn.is_online):
+            if fa.kind == "outage":
+                m("sim_regional_outages_total").inc()
+                self.log.note(self.now, "outage", node=fa.node,
+                              until=round(fa.until, 6),
+                              members=len(fa.members))
+                for v in (fa.node,) + fa.members:
+                    until = max(self.churn.offline_until.get(v, 0.0),
+                                fa.until)
+                    self.churn.offline_until[v] = until
+                    m("sim_dropouts_total").inc()
+                    if self.tracer is not None:
+                        self.tracer.add_span(
+                            "offline", cat="churn", node=v,
+                            sim_t0=self.now, sim_t1=until, round=r,
+                        )
+                    self.log.note(self.now, "dropout", node=v,
+                                  until=round(until, 6))
+            elif fa.kind == "flap":
+                m("sim_link_flaps_total").inc()
+                if self.tracer is not None:
+                    self.tracer.instant("link_flap", sim_t=self.now,
+                                        node=fa.node)
+                self.log.note(self.now, "link_flap", node=fa.node,
+                              until=round(fa.until, 6))
 
     # -- work-item round ---------------------------------------------------
 
@@ -301,61 +357,101 @@ class SimEngine:
             counter("sim_dispatch_items_total").inc(len(enabled))
             counter("sim_dispatches_total").inc(len(groups))
             tr = self.tracer
-            timed: dict[WorkItem, tuple[float, float, int]] = {}
+            timed: dict[WorkItem, tuple[float, list]] = {}
             for group in groups:
                 starts = [
                     max(enabled_at[it], ready.get(it.node, t0),
                         ready.get(it.peer, t0), t0)
                     for it in group
                 ]
+                comps = [self._item_compute_s(it) for it in group]
+                # fail-fast fault model: every attempt's fate is decided at
+                # its start from compute + backoff times alone, so doomed
+                # items are known BEFORE execution and never run — there is
+                # no FedEEC/SKR state to roll back (docs/robustness.md)
+                scheds: list[AttemptSchedule] | None = None
+                live = group
+                if self.faults is not None:
+                    scheds = [
+                        self.faults.plan_attempts(it.node, start, comp)
+                        for it, start, comp in zip(group, starts, comps)
+                    ]
+                    for sched in scheds:
+                        counter("sim_transfer_failures_total").inc(
+                            sched.failures)
+                        counter("sim_transfer_retries_total").inc(
+                            sched.retries)
+                    live = [it for it, sched in zip(group, scheds)
+                            if sched.outcome == "ok"]
                 with (tr.span("dispatch_group", cat="dispatch",
                               n_items=len(group), round=r)
                       if tr is not None else nullcontext()):
-                    with (tr.span("execute_batch" if len(group) > 1
+                    with (tr.span("execute_batch" if len(live) > 1
                                   else "execute", cat="execute",
-                                  n_items=len(group))
+                                  n_items=len(live))
                           if tr is not None else nullcontext()) as es, \
                             self.trainer.comm.span() as sp:
-                        if len(group) == 1:
-                            self.trainer.execute(group[0])
-                        else:
-                            self.trainer.execute_batch(group)
+                        if len(live) == 1:
+                            self.trainer.execute(live[0])
+                        elif live:
+                            self.trainer.execute_batch(live)
                             counter("sim_batched_dispatches_total").inc()
-                            counter("sim_batched_items_total").inc(len(group))
+                            counter("sim_batched_items_total").inc(len(live))
                     total = sum(sp.by_link.values())
                     # same-signature items record identical traffic, so the
                     # even split is exact; floor division keeps the serial
                     # sum's type (int stays int, float stays float — a type
                     # flip would change the JSON byte payloads and break
                     # signature identity)
-                    nbytes = total // len(group)
-                    host_each = (es.host_dur / len(group)
-                                 if tr is not None else 0.0)
-                    for it, start in zip(group, starts):
-                        comp = self._item_compute_s(it)
-                        xfer = self.net.transfer_s(it.node, nbytes)
-                        dur = comp + xfer
-                        counter("sim_link_bytes_total",
-                                link=link_kind(self.tree, it.node)).inc(nbytes)
-                        if tr is not None:
-                            factor, slow = self._item_straggle(it)
-                            tr.add_span(
-                                f"{it.kind} {it.node}->{it.peer}",
-                                cat="item", node=it.node,
-                                sim_t0=start, sim_t1=start + dur,
-                                host_dur=host_each, kind=it.kind,
-                                peer=it.peer, round=r, bytes=nbytes,
-                                compute_s=round(comp, 6),
-                                transfer_s=round(xfer, 6),
-                                straggle=factor, straggle_node=slow,
-                            )
-                        ready[it.node] = ready[it.peer] = start + dur
-                        timed[it] = (start, dur, nbytes)
+                    nbytes = total // len(live) if live else 0
+                    host_each = (es.host_dur / len(live)
+                                 if tr is not None and live else 0.0)
+                    for gi, (it, start, comp) in enumerate(
+                            zip(group, starts, comps)):
+                        sched = scheds[gi] if scheds is not None else None
+                        evs = list(sched.events) if sched is not None else []
+                        if sched is None or sched.outcome == "ok":
+                            xfer = self.net.transfer_s(it.node, nbytes)
+                            # with retries, transfer begins at the first
+                            # successful attempt (sched.t_final), not at
+                            # start + comp — backoff waits are the retry tax
+                            t_ok = (start + comp if sched is None
+                                    else sched.t_final)
+                            end = t_ok + xfer
+                            dur = end - start
+                            counter("sim_link_bytes_total",
+                                    link=link_kind(self.tree, it.node)
+                                    ).inc(nbytes)
+                            if tr is not None:
+                                factor, slow = self._item_straggle(it)
+                                tr.add_span(
+                                    f"{it.kind} {it.node}->{it.peer}",
+                                    cat="item", node=it.node,
+                                    sim_t0=start, sim_t1=end,
+                                    host_dur=host_each, kind=it.kind,
+                                    peer=it.peer, round=r, bytes=nbytes,
+                                    compute_s=round(comp, 6),
+                                    transfer_s=round(xfer, 6),
+                                    straggle=factor, straggle_node=slow,
+                                    retries=(sched.retries if sched else 0),
+                                    retry_wait_s=round(
+                                        sched.retry_wait_s if sched else 0.0,
+                                        6),
+                                )
+                            done = {"bytes": nbytes, "dur": round(dur, 6)}
+                            if sched is not None and sched.retries:
+                                done["retries"] = sched.retries
+                            evs.append((end, "pair_done", done))
+                        else:
+                            end = sched.t_final
+                            self._item_failed(it, sched, r, start)
+                        ready[it.node] = ready[it.peer] = end
+                        timed[it] = (start, evs)
             for it, _ in enabled:
-                start, dur, nbytes = timed[it]
+                start, evs = timed[it]
                 q.push(start, "pair_start", it.node, it.peer)
-                q.push(start + dur, "pair_done", it.node, it.peer,
-                       bytes=nbytes, dur=round(dur, 6))
+                for t_ev, kind, payload in evs:
+                    q.push(t_ev, kind, it.node, it.peer, **payload)
 
         dispatch([(it, t0) for it in items if deps[it.node] == 0])
 
@@ -371,7 +467,10 @@ class SimEngine:
                 ev = q.pop()
                 self.now = max(self.now, ev.time)
                 self.log.append(ev)
-                if ev.kind != "pair_done":
+                # graceful degradation: a faulted item (abandoned/timeout)
+                # still releases its parent, which proceeds on the partial
+                # inputs that DID arrive — the graph drains, never deadlocks
+                if ev.kind not in TERMINAL_KINDS:
                     continue
                 parent = ev.target
                 if parent not in scheduled:
@@ -384,6 +483,33 @@ class SimEngine:
 
         self.trainer.end_round(r)
 
+    def _item_failed(self, it: WorkItem, sched: AttemptSchedule, r: int,
+                     start: float) -> None:
+        """Account for an item whose every transfer attempt failed: bump
+        the fault counters, take a departed node offline (the churn
+        process's rejoin sweep recovers it), and notify the trainer so the
+        loss is excluded from aggregation weights."""
+        m = self.metrics.counter
+        if sched.outcome == "timeout":
+            m("sim_pair_timeouts_total").inc()
+        else:
+            m("sim_pairs_abandoned_total").inc()
+        if sched.outcome == "departed":
+            m("sim_departures_total").inc()
+            until = max(self.churn.offline_until.get(it.node, 0.0),
+                        sched.offline_until)
+            self.churn.offline_until[it.node] = until
+        if self.tracer is not None:
+            self.tracer.add_span(
+                f"{it.kind} {it.node}->{it.peer} [{sched.outcome}]",
+                cat="item", node=it.node,
+                sim_t0=start, sim_t1=sched.t_final,
+                kind=it.kind, peer=it.peer, round=r, bytes=0,
+                outcome=sched.outcome, retries=sched.retries,
+                retry_wait_s=round(sched.retry_wait_s, 6),
+            )
+        self.trainer.on_item_failed(it, sched.outcome)
+
     # -- driver ------------------------------------------------------------
 
     def run(
@@ -392,9 +518,22 @@ class SimEngine:
         *,
         eval_fn: Optional[Callable[[], float]] = None,
         eval_every: int = 1,
+        checkpoint_every: int = 0,
+        checkpoint_path: str = "",
+        stop_after: Optional[int] = None,
     ) -> EventLog:
+        """Run rounds ``[self._round_next, rounds)``. A fresh engine starts
+        at round 0; one restored via :meth:`restore_checkpoint` continues
+        where the snapshot left off — and, because every mutable stream
+        (churn/fault RNGs, queue seq, log, trainer) was snapshotted, its
+        event signature is bit-identical to an uninterrupted run.
+
+        ``checkpoint_every`` > 0 snapshots to ``checkpoint_path`` after
+        every N-th round; ``stop_after`` ends the run after that many
+        total rounds WITHOUT the final-round eval (simulating a kill mid
+        run — the resumed run owns the remaining rounds)."""
         tr = self.tracer
-        for r in range(rounds):
+        for r in range(self._round_next, rounds):
             t_start = self.now
             self.log.note(self.now, "round_start", round=r)
             with (tr.span(f"round {r}", cat="round", sim_t0=self.now,
@@ -416,10 +555,131 @@ class SimEngine:
             self.metrics.histogram("sim_round_duration_seconds").observe(
                 self.now - t_start)
             self.log.note(self.now, "round_end", round=r)
+            self._round_next = r + 1
             if eval_fn and ((r + 1) % eval_every == 0 or r == rounds - 1):
                 with (tr.span("eval", cat="eval", round=r)
                       if tr is not None else nullcontext()):
                     acc = eval_fn()
                 self.acc_points.append((round(self.now, 6), acc))
                 self.log.note(self.now, "eval", round=r, acc=round(acc, 6))
+            if checkpoint_every > 0 and checkpoint_path and \
+                    (r + 1) % checkpoint_every == 0:
+                self.save_checkpoint(checkpoint_path)
+            if stop_after is not None and r + 1 >= stop_after:
+                break
         return self.log
+
+    # -- checkpoint / resume (docs/robustness.md) ---------------------------
+
+    def save_checkpoint(self, path: str) -> None:
+        """Snapshot the full simulation state into directory ``path``:
+        ``trainer.msgpack`` (array pytrees via ``repro.checkpoint``) and
+        ``engine.json`` (everything else — RNG generator states carry
+        >64-bit integers, which JSON handles and msgpack does not). Both
+        writes are crash-safe (temp file + atomic replace), and the json
+        is written last so a directory containing ``engine.json`` is
+        always a complete, loadable snapshot."""
+        import json
+        import os
+        import tempfile
+
+        from repro.checkpoint import save_pytree
+
+        os.makedirs(path, exist_ok=True)
+        save_pytree(os.path.join(path, "trainer.msgpack"),
+                    self.trainer.state_arrays())
+        meta = {
+            "round_next": self._round_next,
+            "now": self.now,
+            "acc_points": [[t, a] for t, a in self.acc_points],
+            "queue_seq": self.queue._seq,
+            "log": {"entries": self.log.entries, "ord": self.log._ord},
+            # children list ORDER is saved verbatim: it drives post_order,
+            # hence work-item order, hence the event signature
+            "tree": {
+                "root": self.tree.root,
+                "parent": dict(self.tree.parent),
+                "children": {k: list(v)
+                             for k, v in self.tree.children.items()},
+                "devices": sorted(self.tree.devices),
+            },
+            "churn": {
+                "rng": self.churn.rng.bit_generator.state,
+                "offline_until": dict(self.churn.offline_until),
+                "stragglers": sorted(self.churn.stragglers),
+            },
+            "faults": self.faults.state() if self.faults is not None
+            else None,
+            "comm": {
+                "bytes": dict(self.trainer.comm.bytes),
+                "events": dict(self.trainer.comm.events),
+            },
+            "trainer": self.trainer.state_meta(),
+        }
+        fd, tmp = tempfile.mkstemp(dir=path, suffix=".json.tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(meta, f)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, os.path.join(path, "engine.json"))
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+        self.metrics.counter("sim_checkpoints_total").inc()
+
+    def restore_checkpoint(self, path: str) -> None:
+        """Restore a :meth:`save_checkpoint` snapshot into THIS engine
+        (constructed with the same trainer/scenario/seed). Every stream a
+        round consumes is restored — churn and fault generator states, the
+        queue's seq counter, the log (entries and ord), topology with
+        children-list order, comm totals, and the trainer's params/opt/
+        rng — so the continued run is bit-identical to one that never
+        stopped."""
+        import json
+        import os
+
+        from repro.checkpoint import load_pytree
+
+        with open(os.path.join(path, "engine.json")) as f:
+            meta = json.load(f)
+        arrays = load_pytree(os.path.join(path, "trainer.msgpack"))
+
+        self._round_next = int(meta["round_next"])
+        self.now = float(meta["now"])
+        self.acc_points = [(float(t), float(a))
+                           for t, a in meta["acc_points"]]
+        self.queue._seq = int(meta["queue_seq"])
+        self.log.entries = list(meta["log"]["entries"])
+        self.log._ord = int(meta["log"]["ord"])
+
+        t = meta["tree"]
+        self.tree.parent.clear()
+        self.tree.parent.update({str(k): str(v)
+                                 for k, v in t["parent"].items()})
+        self.tree.children.clear()
+        self.tree.children.update({str(k): [str(c) for c in v]
+                                   for k, v in t["children"].items()})
+
+        self.churn.rng.bit_generator.state = meta["churn"]["rng"]
+        self.churn.offline_until = {
+            str(k): float(v)
+            for k, v in meta["churn"]["offline_until"].items()
+        }
+        self.churn.stragglers = set(meta["churn"]["stragglers"])
+
+        if self.faults is not None and meta["faults"] is not None:
+            self.faults.load_state(meta["faults"])
+
+        comm = self.trainer.comm
+        comm.bytes.clear()
+        comm.bytes.update({str(k): float(v)
+                           for k, v in meta["comm"]["bytes"].items()})
+        comm.events.clear()
+        comm.events.update({str(k): int(v)
+                            for k, v in meta["comm"]["events"].items()})
+
+        self.trainer.load_state(meta["trainer"], arrays)

@@ -14,6 +14,12 @@ Telemetry (docs/observability.md): ``--trace OUT.json`` records a
 hierarchical Chrome trace (open it in Perfetto), ``--metrics OUT.json``
 writes the metrics-registry snapshot, and ``--explain-rounds`` prints the
 per-round critical-path attribution (who gated the round and why).
+
+Fault plane (docs/robustness.md): ``--faults <plan>`` overrides the
+scenario's fault plan, ``--checkpoint-every N`` + ``--checkpoint-dir``
+snapshot the engine, ``--resume <dir>`` continues a snapshot, and
+``--verify-resume`` proves a killed-and-resumed run's event signature is
+bit-identical to an uninterrupted one.
 """
 from __future__ import annotations
 
@@ -94,6 +100,22 @@ def main(argv=None) -> int:
                     help="list registered scenarios and exit")
     ap.add_argument("--verify", action="store_true",
                     help="run twice, assert identical event logs")
+    ap.add_argument("--faults", default="",
+                    help="fault plan name (repro.sim.faults) overriding "
+                         "the scenario's; 'none' disables faults")
+    ap.add_argument("--checkpoint-every", type=int, default=0,
+                    help="snapshot engine state every N rounds")
+    ap.add_argument("--checkpoint-dir", default="",
+                    help="checkpoint directory (default: "
+                         "checkpoints/<scenario> when --checkpoint-every)")
+    ap.add_argument("--resume", default="",
+                    help="resume from a checkpoint directory; the "
+                         "continued run is bit-identical to an "
+                         "uninterrupted one")
+    ap.add_argument("--verify-resume", action="store_true",
+                    help="kill-and-resume proof: run to the midpoint, "
+                         "checkpoint, resume to the end, assert the "
+                         "signature equals the uninterrupted run's")
     args = ap.parse_args(argv)
 
     if args.list:
@@ -118,13 +140,24 @@ def main(argv=None) -> int:
               f"{', '.join(list_algorithms())}", file=sys.stderr)
         return 2
 
+    if args.faults:
+        from repro.sim.faults import list_fault_plans
+
+        if args.faults not in list_fault_plans():
+            print(f"error: unknown fault plan {args.faults!r}; known: "
+                  f"{', '.join(list_fault_plans())}", file=sys.stderr)
+            return 2
+
     rc = 0
     for name in names:
         args.scenario = name
         cfg = build_cfg(args)
+        ckpt_dir = args.checkpoint_dir or (
+            f"checkpoints/{name}" if args.checkpoint_every else "")
         print(f"scenario={name} algorithm={args.algorithm} "
               f"rounds={args.rounds} clients={cfg.num_clients} "
-              f"edges={cfg.num_edges} seed={cfg.seed}")
+              f"edges={cfg.num_edges} seed={cfg.seed}"
+              + (f" faults={args.faults}" if args.faults else ""))
         tracer = None
         if args.trace:
             from repro.obs.trace import Tracer
@@ -132,7 +165,11 @@ def main(argv=None) -> int:
             tracer = Tracer()
         res = run_experiment(args.algorithm, cfg, rounds=args.rounds,
                              eval_every=args.eval_every, verbose=True,
-                             tracer=tracer)
+                             tracer=tracer,
+                             faults=args.faults or None,
+                             checkpoint_every=args.checkpoint_every,
+                             checkpoint_dir=ckpt_dir,
+                             resume_from=args.resume)
         describe(res, args.max_events)
 
         def _path(opt):
@@ -169,10 +206,35 @@ def main(argv=None) -> int:
 
         if args.verify:
             res2 = run_experiment(args.algorithm, cfg, rounds=args.rounds,
-                                  eval_every=args.eval_every)
+                                  eval_every=args.eval_every,
+                                  faults=args.faults or None)
             same = res2.event_signature == res.event_signature
             print(f"\nreplay signature {res2.event_signature} "
                   f"{'== original (deterministic)' if same else '!= ORIGINAL'}")
+            if not same:
+                rc = 1
+
+        if args.verify_resume:
+            # kill-and-resume proof: stop at the midpoint with a
+            # checkpoint, resume to the end, and require the signature to
+            # equal the uninterrupted run's (docs/robustness.md)
+            import tempfile
+
+            half = max(1, args.rounds // 2)
+            with tempfile.TemporaryDirectory() as ckpt:
+                run_experiment(args.algorithm, cfg, rounds=args.rounds,
+                               eval_every=args.eval_every,
+                               faults=args.faults or None,
+                               stop_after=half, checkpoint_every=half,
+                               checkpoint_dir=ckpt)
+                res3 = run_experiment(args.algorithm, cfg,
+                                      rounds=args.rounds,
+                                      eval_every=args.eval_every,
+                                      faults=args.faults or None,
+                                      resume_from=ckpt)
+            same = res3.event_signature == res.event_signature
+            print(f"kill-and-resume signature {res3.event_signature} "
+                  f"{'== uninterrupted (checkpoint-resume exact)' if same else '!= UNINTERRUPTED'}")
             if not same:
                 rc = 1
         print()

@@ -11,8 +11,9 @@ mobility / scripted trace). Scenarios are frozen dataclasses so a
 from __future__ import annotations
 
 from dataclasses import dataclass, replace
-from typing import Tuple
+from typing import Optional, Tuple
 
+from repro.sim.faults import FaultPlan, get_fault_plan
 from repro.sim.network import (
     DEFAULT_EDGE_CLOUD,
     DEFAULT_END_EDGE,
@@ -63,6 +64,11 @@ class ScenarioConfig:
     mass_migration_round: int = -1  # round index; -1 disables
     mass_migration_frac: float = 0.0  # fraction of leaves moved that round
     trace: Tuple[TraceEntry, ...] = ()
+
+    # -- fault injection (repro.sim.faults; docs/robustness.md) ------------
+    # None or an inactive plan keeps the engine on the fault-free fast
+    # path, whose event signatures are bit-identical to pre-fault builds
+    faults: Optional[FaultPlan] = None
 
     def with_overrides(self, **kw) -> "ScenarioConfig":
         return replace(self, **kw)
@@ -148,6 +154,29 @@ register_scenario(ScenarioConfig(
     dropout_prob=0.10,
     dropout_s=(2.0, 8.0),
     end_edge=LinkSpec(latency_s=0.040, bandwidth_Bps=4 * 1e6 / 8, spread=0.4),
+))
+
+register_scenario(ScenarioConfig(
+    "lossy_links",
+    "Hostile access network: per-attempt transfer loss on both hops with "
+    "capped-backoff retries (fault plan 'lossy', docs/robustness.md).",
+    faults=get_fault_plan("lossy"),
+))
+
+register_scenario(ScenarioConfig(
+    "regional_outage",
+    "Correlated regional failures: an edge and all its clients drop "
+    "together for tens of seconds (fault plan 'regional').",
+    faults=get_fault_plan("regional"),
+))
+
+register_scenario(ScenarioConfig(
+    "byzantine_noise",
+    "Byzantine label-noise clients over mild churn: 30% of clients flip "
+    "half their labels, stressing SKR's self-rectification claim.",
+    dropout_prob=0.10,
+    dropout_s=(2.0, 10.0),
+    faults=get_fault_plan("byzantine"),
 ))
 
 register_scenario(ScenarioConfig(

@@ -1,0 +1,18 @@
+"""DET004 violation: RNGs constructed in draw paths instead of __init__."""
+import numpy as np
+
+_RNG = np.random.default_rng(0)  # module level
+
+
+class FaultProcess:
+    def __init__(self, seed: int):
+        self.seed = seed
+
+    def draw_round(self, r: int):
+        # re-keys the stream every round — schedule depends on call count
+        rng = np.random.default_rng(self.seed + r)
+        return rng.random()
+
+    def transfer_fails(self, node: str):
+        ss = np.random.SeedSequence([self.seed, hash(node)])
+        return np.random.default_rng(ss).random() < 0.1

@@ -1,0 +1,18 @@
+"""DET004 clean: per-concern streams built once in __init__."""
+import numpy as np
+
+_STREAMS = ("loss", "backoff", "flap")
+
+
+class FaultProcess:
+    def __init__(self, seed: int):
+        self.rngs = {
+            name: np.random.default_rng(np.random.SeedSequence([seed, i]))
+            for i, name in enumerate(_STREAMS)
+        }
+
+    def draw_round(self, r: int):
+        return self.rngs["flap"].random()
+
+    def transfer_fails(self, node: str):
+        return self.rngs["loss"].random() < 0.1

@@ -1,0 +1,371 @@
+"""Fault-injection & recovery plane: seeded fault schedules, retry/backoff
+semantics, graceful degradation hooks, checkpoint-resume bit-identity, and
+crash-safe checkpoint writes (docs/robustness.md)."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.topology import Tree
+from repro.sim.faults import (
+    FaultPlan,
+    FaultProcess,
+    apply_label_noise,
+    get_fault_plan,
+    list_fault_plans,
+)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # the property has a deterministic fallback below
+    HAVE_HYPOTHESIS = False
+
+TABLES = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                      "tables", "scenarios.json")
+
+
+def _small_cfg(**kw):
+    from repro.configs.base import FLConfig
+
+    base = dict(num_clients=4, num_edges=2, samples_per_client=16,
+                test_samples=64, image_size=8, embed_dim=16,
+                edge_model="cnn2", cloud_model="cnn2")
+    base.update(kw)
+    return FLConfig(**base)
+
+
+def _gate_engine(scenario, algorithm="fedeec", faults=None, seed=0):
+    """A gate-sized SimEngine (no eval), mirroring scenario_signatures."""
+    from repro.fl.api import create_algorithm
+    from repro.fl.engine import build_problem
+    from repro.sim.engine import SimEngine
+    from repro.sim.scenarios import get_scenario
+
+    cfg = _small_cfg(seed=seed)
+    _, tree, client_data, auto = build_problem(cfg)
+    trainer = create_algorithm(algorithm, cfg, tree, client_data, auto)
+    return SimEngine(trainer, get_scenario(scenario), seed=seed,
+                     faults=faults)
+
+
+# ---------------------------------------------------------------------------
+# fault plans + registry
+# ---------------------------------------------------------------------------
+
+
+def test_fault_plan_registry():
+    assert {"none", "lossy", "regional", "flaky_links", "chaos",
+            "byzantine"} <= set(list_fault_plans())
+    with pytest.raises(KeyError):
+        get_fault_plan("no_such_plan")
+
+
+def test_plan_activity():
+    assert not get_fault_plan("none").active()
+    # label noise alone needs no FaultProcess (pre-run data rewrite)
+    assert not get_fault_plan("byzantine").active()
+    for name in ("lossy", "regional", "flaky_links", "chaos"):
+        assert get_fault_plan(name).active(), name
+
+
+# ---------------------------------------------------------------------------
+# seeded schedule determinism (the property the signature gate rests on)
+# ---------------------------------------------------------------------------
+
+
+def _schedule_trace(plan, seed, draws):
+    """The full fault/retry schedule for a fixed sequence of queries —
+    a pure function of (plan, seed, queries)."""
+    tree = Tree.three_tier(2, 4)
+    fp = FaultProcess(tree, plan, seed=seed)
+    trace = []
+    for r, (node, start, comp) in enumerate(draws):
+        for a in fp.draw_round(r, start, lambda v, t: True):
+            trace.append((a.kind, a.node, a.until, a.members))
+        s = fp.plan_attempts(node, start, comp)
+        trace.append((s.events, s.t_final, s.outcome, s.retries,
+                      s.failures, s.retry_wait_s, s.offline_until))
+    return trace
+
+
+def _assert_schedule_deterministic(seed, loss, flap, outage, departure):
+    plan = FaultPlan("t", transfer_loss_prob=loss, link_flap_prob=flap,
+                     regional_outage_prob=outage, departure_prob=departure,
+                     deadline_s=40.0)
+    nodes = ["client0", "client1", "client2", "client3", "edge0", "edge1"]
+    draws = [(nodes[i % len(nodes)], 10.0 * i, 1.0 + 0.5 * i)
+             for i in range(12)]
+    assert (_schedule_trace(plan, seed, draws)
+            == _schedule_trace(plan, seed, draws))
+
+
+if HAVE_HYPOTHESIS:
+
+    @given(st.integers(0, 2**31 - 1), st.floats(0.0, 0.9),
+           st.floats(0.0, 0.5), st.floats(0.0, 0.5), st.floats(0.0, 0.5))
+    @settings(max_examples=25, deadline=None)
+    def test_fault_schedule_bit_identical_across_runs(
+            seed, loss, flap, outage, departure):
+        """Property: the complete fault/retry schedule is bit-identical
+        across two same-seed FaultProcess instances."""
+        _assert_schedule_deterministic(seed, loss, flap, outage, departure)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 7, 123, 99991])
+def test_fault_schedule_deterministic_fallback(seed):
+    _assert_schedule_deterministic(seed, 0.5, 0.2, 0.2, 0.2)
+
+
+def test_streams_are_independent():
+    """Draining one concern's stream must not shift another's draws."""
+    tree = Tree.three_tier(2, 4)
+    plan = FaultPlan("t", transfer_loss_prob=0.5, regional_outage_prob=0.3)
+    a = FaultProcess(tree, plan, seed=5)
+    b = FaultProcess(tree, plan, seed=5)
+    for _ in range(50):  # drain a's loss stream only
+        a._transfer_fails("client0", 0.0)
+        b._transfer_fails("client0", 0.0)
+    acts_a = a.draw_round(0, 0.0, lambda v, t: True)
+    acts_b = b.draw_round(0, 0.0, lambda v, t: True)
+    assert [(x.kind, x.node, x.until) for x in acts_a] == \
+           [(x.kind, x.node, x.until) for x in acts_b]
+
+
+# ---------------------------------------------------------------------------
+# retry / backoff / deadline semantics
+# ---------------------------------------------------------------------------
+
+
+def _proc(plan, seed=0):
+    return FaultProcess(Tree.three_tier(2, 4), plan, seed=seed)
+
+
+def test_backoff_doubles_and_caps():
+    plan = FaultPlan("t", transfer_loss_prob=1.0, max_retries=6,
+                     backoff_base_s=0.5, backoff_cap_s=2.0,
+                     backoff_jitter=0.0)
+    fp = _proc(plan)
+    sched = fp.plan_attempts("client0", 0.0, 1.0)
+    assert sched.outcome == "abandoned"
+    assert sched.failures == 7 and sched.retries == 6
+    retries = [e for e in sched.events if e[1] == "pair_retried"]
+    waits = [e[2]["wait"] for e in retries]
+    assert waits == [0.5, 1.0, 2.0, 2.0, 2.0, 2.0]  # doubling, then capped
+    assert sched.retry_wait_s == pytest.approx(sum(waits))
+    assert sched.events[-1][1] == "pair_abandoned"
+    assert sched.events[-1][2]["reason"] == "retries"
+
+
+def test_backoff_jitter_is_bounded_and_seeded():
+    plan = FaultPlan("t", transfer_loss_prob=1.0, max_retries=4,
+                     backoff_base_s=1.0, backoff_cap_s=64.0,
+                     backoff_jitter=0.25)
+    w1 = [e[2]["wait"] for e in _proc(plan, 3).plan_attempts(
+        "client0", 0.0, 1.0).events if e[1] == "pair_retried"]
+    w2 = [e[2]["wait"] for e in _proc(plan, 3).plan_attempts(
+        "client0", 0.0, 1.0).events if e[1] == "pair_retried"]
+    assert w1 == w2  # seeded jitter
+    for k, w in enumerate(w1):
+        nominal = 2.0 ** k
+        assert 0.75 * nominal - 1e-9 <= w <= 1.25 * nominal + 1e-9
+
+
+def test_deadline_times_out_before_retries_exhaust():
+    plan = FaultPlan("t", transfer_loss_prob=1.0, max_retries=50,
+                     backoff_base_s=4.0, backoff_jitter=0.0,
+                     deadline_s=10.0)
+    sched = _proc(plan).plan_attempts("client0", 100.0, 1.0)
+    assert sched.outcome == "timeout"
+    assert sched.t_final == pytest.approx(110.0)
+    assert sched.events[-1][1] == "pair_timeout"
+    # event times are non-decreasing (queue/log ordering contract)
+    times = [t for t, _, _ in sched.events]
+    assert times == sorted(times)
+
+
+def test_departure_abandons_and_sets_offline_window():
+    plan = FaultPlan("t", transfer_loss_prob=1.0, departure_prob=1.0,
+                     departure_s=(5.0, 15.0))
+    sched = _proc(plan).plan_attempts("client0", 0.0, 2.0)
+    assert sched.outcome == "departed"
+    assert sched.events[-1][2]["reason"] == "departed"
+    assert sched.offline_until is not None
+    assert 5.0 <= sched.offline_until - sched.t_final <= 15.0
+
+
+def test_zero_loss_schedules_clean_transfer():
+    sched = _proc(FaultPlan("t")).plan_attempts("client0", 3.0, 2.0)
+    assert sched.outcome == "ok" and sched.events == ()
+    assert sched.t_final == pytest.approx(5.0)
+    assert sched.retries == sched.failures == 0
+
+
+def test_link_loss_override_and_flap_escalation():
+    plan = FaultPlan("t", transfer_loss_prob=0.1,
+                     link_loss_prob=(("end-edge", 0.4),),
+                     link_flap_prob=1.0, flap_loss_prob=0.95)
+    fp = _proc(plan)
+    assert fp.loss_prob("client0", 0.0) == pytest.approx(0.4)
+    assert fp.loss_prob("edge0", 0.0) == pytest.approx(0.1)
+    fp.flapped_until["client0"] = 50.0
+    assert fp.loss_prob("client0", 10.0) == pytest.approx(0.95)
+    assert fp.loss_prob("client0", 60.0) == pytest.approx(0.4)  # expired
+
+
+def test_regional_outage_takes_edge_and_members_together():
+    plan = FaultPlan("t", regional_outage_prob=1.0, outage_s=(10.0, 30.0))
+    fp = _proc(plan)
+    acts = fp.draw_round(0, 0.0, lambda v, t: True)
+    outages = [a for a in acts if a.kind == "outage"]
+    assert [a.node for a in outages] == ["edge0", "edge1"]
+    for a in outages:
+        assert a.members == tuple(sorted(fp.tree.children[a.node]))
+        assert 10.0 <= a.until <= 30.0
+
+
+# ---------------------------------------------------------------------------
+# byzantine label noise
+# ---------------------------------------------------------------------------
+
+
+def test_label_noise_is_seeded_and_scoped():
+    plan = get_fault_plan("byzantine")
+    rng = np.random.default_rng(0)
+    data = {f"client{i}": (rng.normal(size=(8, 4)),
+                           rng.integers(0, 10, size=8))
+            for i in range(10)}
+    out1, byz1 = apply_label_noise(plan, data, seed=7, num_classes=10)
+    out2, byz2 = apply_label_noise(plan, data, seed=7, num_classes=10)
+    assert byz1 == byz2 and len(byz1) == 3  # 30% of 10
+    for v in data:
+        assert np.array_equal(out1[v][1], out2[v][1])
+        if v not in byz1:  # honest clients untouched
+            assert np.array_equal(out1[v][1], data[v][1])
+    # flipped labels stay valid classes and some actually flipped
+    flipped = sum(int(np.any(out1[v][1] != data[v][1])) for v in byz1)
+    assert flipped >= 1
+    assert all(out1[v][1].min() >= 0 and out1[v][1].max() < 10 for v in byz1)
+
+
+# ---------------------------------------------------------------------------
+# engine integration: faults-off identity + graceful degradation
+# ---------------------------------------------------------------------------
+
+
+def test_none_plan_reproduces_tracked_signature():
+    """Fault rate 0.0 ('none' plan) must reproduce the pre-fault
+    simulator's tracked scenarios.json signature bit-for-bit."""
+    with open(TABLES) as f:
+        tracked = json.load(f)
+    eng = _gate_engine("stable", faults=get_fault_plan("none"))
+    assert eng.faults is None  # inactive plan → no fault code path at all
+    eng.run(2)
+    assert eng.log.signature() == tracked["fedeec/stable"]
+
+
+def test_chaos_scenarios_complete_without_deadlock():
+    for scenario in ("lossy_links", "regional_outage"):
+        eng = _gate_engine(scenario)
+        log = eng.run(2)
+        assert log.count("round_end") == 2
+        # every started pair reached a terminal event
+        terminal = (log.count("pair_done") + log.count("pair_abandoned")
+                    + log.count("pair_timeout"))
+        assert log.count("pair_start") == terminal
+
+
+def test_fedeec_records_failed_pairs():
+    eng = _gate_engine("lossy_links",
+                       faults=get_fault_plan("lossy").with_overrides(
+                           transfer_loss_prob=0.9,
+                           link_loss_prob=(("end-edge", 0.9),),
+                           max_retries=0))
+    log = eng.run(1)
+    assert log.count("pair_abandoned") >= 1
+    assert len(eng.trainer.failed_pairs) == log.count("pair_abandoned")
+    assert all(reason == "abandoned"
+               for _, _, reason in eng.trainer.failed_pairs)
+
+
+def test_hierfavg_drops_failed_client_from_weights():
+    from repro.fl.api import WorkItem, create_algorithm
+    from repro.fl.engine import build_problem
+
+    cfg = _small_cfg()
+    _, tree, client_data, auto = build_problem(cfg)
+    t = create_algorithm("hierfavg", cfg, tree, client_data, auto)
+    t.begin_round(0)
+    edge = tree.parent["client0"]
+    for c in sorted(tree.children[edge]):
+        t.execute(WorkItem("local", c, edge))
+    staged = len(t._round_updates[edge])
+    t.on_item_failed(WorkItem("local", "client0", edge), "abandoned")
+    assert len(t._round_updates[edge]) == staged - 1
+    assert all(c != "client0" for c, _ in t._round_updates[edge])
+
+
+# ---------------------------------------------------------------------------
+# checkpoint-resume
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("algorithm,scenario", [
+    ("fedeec", "lossy_links"),
+    ("hierfavg", "regional_outage"),
+])
+def test_checkpoint_resume_is_bit_identical(tmp_path, algorithm, scenario):
+    from repro.fl.engine import run_experiment
+
+    cfg = _small_cfg(scenario=scenario)
+    full = run_experiment(algorithm, cfg, rounds=4, eval_every=2)
+    ckpt = str(tmp_path / "ckpt")
+    run_experiment(algorithm, cfg, rounds=4, eval_every=2,
+                   stop_after=2, checkpoint_every=2, checkpoint_dir=ckpt)
+    resumed = run_experiment(algorithm, cfg, rounds=4, eval_every=2,
+                             resume_from=ckpt)
+    assert resumed.event_signature == full.event_signature
+    assert resumed.sim_times == full.sim_times
+    assert resumed.acc_curve == pytest.approx(full.acc_curve)
+
+
+# ---------------------------------------------------------------------------
+# crash-safe checkpoint writes
+# ---------------------------------------------------------------------------
+
+
+def test_save_pytree_midwrite_failure_keeps_old_file(tmp_path, monkeypatch):
+    from repro.checkpoint import load_pytree, save_pytree
+
+    path = str(tmp_path / "state.msgpack")
+    save_pytree(path, {"w": np.arange(4.0)})
+
+    import repro.checkpoint.checkpoint as ckpt_mod
+
+    def exploding_replace(src, dst):
+        raise OSError("simulated crash before rename")
+
+    monkeypatch.setattr(ckpt_mod.os, "replace", exploding_replace)
+    with pytest.raises(OSError, match="simulated crash"):
+        save_pytree(path, {"w": np.arange(8.0)})
+    monkeypatch.undo()
+
+    # the old checkpoint is intact and no temp files leak
+    old = load_pytree(path)
+    assert np.array_equal(old["w"], np.arange(4.0))
+    assert [f for f in os.listdir(tmp_path) if f.endswith(".tmp")] == []
+
+
+def test_save_pytree_engine_json_written_last(tmp_path):
+    """SimEngine.save_checkpoint writes engine.json after the arrays, so
+    its presence implies a complete snapshot."""
+    eng = _gate_engine("lossy_links")
+    eng.run(1)
+    d = str(tmp_path / "snap")
+    eng.save_checkpoint(d)
+    assert sorted(os.listdir(d)) == ["engine.json", "trainer.msgpack"]
+    with open(os.path.join(d, "engine.json")) as f:
+        meta = json.load(f)
+    assert meta["round_next"] == 1
+    assert meta["faults"] is not None  # stream states snapshotted
