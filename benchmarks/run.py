@@ -38,6 +38,13 @@ counters, see docs/robustness.md) is tracked in ``BENCH_faults.json``:
   python -m benchmarks.run --check-faults    # CI gate
   python -m benchmarks.run --update-faults   # re-baseline
 
+The simulator-core scale contract (population-tier event totals and
+signatures, see docs/simulator.md; throughput recorded but never gated)
+is tracked in ``BENCH_sim.json``:
+
+  python -m benchmarks.run --check-sim     # CI gate
+  python -m benchmarks.run --update-sim    # re-baseline + re-time
+
 All gates share the diff/report helpers in ``benchmarks.gate``.
 """
 from __future__ import annotations
@@ -75,7 +82,8 @@ def check_tables(path: str = TABLES_PATH) -> int:
 
 def _gates():
     """The --check-*/--update-* family: name -> (check_fn, update_fn)."""
-    from benchmarks import analysis_bench, faults_bench, kernel_bench, obs_bench
+    from benchmarks import (analysis_bench, faults_bench, kernel_bench,
+                            obs_bench, sim_bench)
 
     return {
         "tables": (check_tables, write_tables),
@@ -83,10 +91,11 @@ def _gates():
         "obs": (obs_bench.check_bench, obs_bench.write_bench),
         "analysis": (analysis_bench.check_bench, analysis_bench.write_bench),
         "faults": (faults_bench.check_bench, faults_bench.write_bench),
+        "sim": (sim_bench.check_bench, sim_bench.write_bench),
     }
 
 
-GATE_NAMES = ("tables", "kernels", "obs", "analysis", "faults")
+GATE_NAMES = ("tables", "kernels", "obs", "analysis", "faults", "sim")
 GATE_HELP = {
     "tables": "scenario event signatures (benchmarks/tables/scenarios.json)",
     "kernels": "BENCH_kernels.json structure, batched-kernel parity, "
@@ -94,6 +103,8 @@ GATE_HELP = {
     "obs": "BENCH_obs.json metric names, span categories, critical path",
     "analysis": "static analysis + BENCH_analysis.json contract surface",
     "faults": "BENCH_faults.json chaos-scenario fault signatures + counters",
+    "sim": "BENCH_sim.json population-tier event totals + signatures "
+           "(throughput informational)",
 }
 
 

@@ -1,0 +1,190 @@
+"""Simulator-core scale benchmark: the population-tier contract.
+
+``collect()`` drives the discrete-event engine with a pure-scheduling
+null trainer (no jax, no model state) across population tiers — 1k and
+10k fully materialized device populations plus a 100k-device tier
+declared through weighted cohorts (docs/simulator.md) — and records
+
+* the **event signature** and **event total** per tier: the schedule is
+  a pure function of (tier shape, seed), so both are bit-stable and
+  gated — the gate proves the array-resident core stays deterministic
+  at three orders of magnitude beyond the scenario table's sizes,
+* **events/sec** and **peak RSS**: hardware-dependent, recorded for
+  trend-watching but NEVER compared by the gate (peak RSS is the
+  process high-water mark, so per-tier values are only meaningful for
+  the largest tier of a run),
+* the 10k tier's throughput ratio against ``PRE_PR_10K_EVENTS_PER_SEC``,
+  the locally measured pre-refactor per-node scheduler path on the same
+  workload (informational — wall-clock never gates).
+
+Everything lands in the tracked ``BENCH_sim.json`` at the repo root;
+``check_bench()`` recomputes the deterministic fields and diffs — that
+is the ``benchmarks.run --check-sim`` CI gate.
+"""
+from __future__ import annotations
+
+import os
+import resource
+import time
+
+from repro.core.topology import Tree
+from repro.fl.api import FLAlgorithm, WorkItem
+from repro.sim.engine import SimEngine
+from repro.sim.scenarios import ScenarioConfig
+
+BENCH_PATH = os.path.normpath(
+    os.path.join(os.path.dirname(__file__), "..", "BENCH_sim.json")
+)
+
+ROUNDS = 3
+
+#: population tiers: (name, topology + declared population). The 100k
+#: tier trains 2k representative devices whose cohort weights stand in
+#: for 100k declared ones (exact under homogeneous cohorts).
+TIERS = (
+    ("1k", dict(clients=1_000, edges=32, population=0)),
+    ("10k", dict(clients=10_000, edges=100, population=0)),
+    ("100k", dict(clients=2_000, edges=64, population=100_000)),
+)
+
+#: per-tier fields the CI gate compares (deterministic by construction)
+GATED_TIER_KEYS = ("clients", "edges", "population", "rounds",
+                   "events_total", "signature")
+
+#: per-tier fields that must exist but are never compared (wall-clock)
+INFO_TIER_KEYS = ("events_per_sec", "peak_rss_mb")
+
+#: events/sec of the 10k tier on the pre-refactor per-node scheduler
+#: path (scalar churn draws, binary-heap pops, quadratic group planning),
+#: measured locally on the same workload before the array-core landed.
+#: Used only for the informational speedup ratio.
+PRE_PR_10K_EVENTS_PER_SEC = 11071.4
+
+
+class _NullSim(FLAlgorithm):
+    """Pure-scheduling trainer: hierfavg-shaped rounds (one "local" item
+    per client feeding one "aggregate" item per edge) with constant comm
+    traffic and no model state — isolates engine/churn/queue cost from
+    jax compute so the tiers measure the simulator core itself."""
+
+    def __init__(self, tree: Tree):
+        super().__init__(None, tree)
+        self._items: list[WorkItem] | None = None
+
+    def work_items(self, round: int, online) -> list[WorkItem]:
+        # the bench scenario never migrates, so the hierfavg-shaped
+        # schedule is identical every round — built once, keeping the
+        # null trainer near-zero-cost so the tiers time the engine itself
+        if self._items is None:
+            items: list[WorkItem] = []
+            root = self.tree.root
+            for e in self.tree.children[root]:
+                for c in self.tree.children[e]:
+                    if self.tree.is_leaf(c):
+                        items.append(WorkItem("local", node=c, peer=e,
+                                              link=self.link_of(c), steps=5))
+                items.append(WorkItem("aggregate", node=e, peer=root,
+                                      link=self.link_of(e)))
+            self._items = items
+        return self._items
+
+    def batch_signature(self, item: WorkItem):
+        # locals coalesce (same shape of work); aggregates run alone —
+        # they all share the root as peer, so they could never group
+        return ("local", item.steps) if item.kind == "local" else None
+
+    def execute(self, item: WorkItem) -> None:
+        self.comm.record(item.link, 1_000, "sync")
+
+    def execute_batch(self, items: list[WorkItem]) -> None:
+        for it in items:
+            self.execute(it)
+
+    def cloud_params(self):
+        return None
+
+    def cloud_apply(self):
+        return lambda params, x: x
+
+
+def _bench_scenario(population: int) -> ScenarioConfig:
+    """The tier workload: mild churn + stragglers so the vectorized
+    draw paths and the offline/rejoin sweeps all run. Built inline, NOT
+    registered — the scenarios.json signature table keys only named
+    network conditions."""
+    return ScenarioConfig(
+        "sim_bench",
+        "synthetic population-scale tier (unregistered)",
+        dropout_prob=0.05,
+        dropout_s=(5.0, 30.0),
+        straggler_frac=0.1,
+        straggler_slowdown=4.0,
+        population=population,
+    )
+
+
+def run_tier(clients: int, edges: int, population: int,
+             rounds: int = ROUNDS, seed: int = 0) -> dict:
+    tree = Tree.three_tier(edges, clients)
+    trainer = _NullSim(tree)
+    engine = SimEngine(trainer, _bench_scenario(population), seed=seed)
+    t0 = time.perf_counter()  # analysis: allow[DET001] host-only bench timing
+    engine.run(rounds)
+    dt = time.perf_counter() - t0  # analysis: allow[DET001]
+    events = len(engine.log.entries)
+    return {
+        "clients": clients,
+        "edges": edges,
+        "population": population,
+        "rounds": rounds,
+        "events_total": events,
+        "signature": engine.log.signature(),
+        "events_per_sec": round(events / dt, 1),
+        "peak_rss_mb": round(
+            resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024, 1),
+    }
+
+
+def collect() -> dict:
+    out: dict = {"tiers": {}}
+    for name, kw in TIERS:
+        out["tiers"][name] = run_tier(**kw)
+    eps_10k = out["tiers"]["10k"]["events_per_sec"]
+    out["speedup_10k_vs_pre_pr"] = (
+        round(eps_10k / PRE_PR_10K_EVENTS_PER_SEC, 1)
+        if PRE_PR_10K_EVENTS_PER_SEC else None
+    )
+    return out
+
+
+def write_bench(path: str = BENCH_PATH) -> dict:
+    from benchmarks import gate
+
+    return gate.write_tracked(path, collect())
+
+
+def check_bench(path: str = BENCH_PATH) -> int:
+    """The --check-sim gate: tier structure + per-tier event totals and
+    signatures must match the tracked file exactly; throughput and RSS
+    fields must exist but are never compared."""
+    from benchmarks import gate
+
+    tracked = gate.load_tracked(path, "--update-sim")
+    if tracked is None:
+        return 2
+    got = collect()
+    problems = gate.diff_value(
+        "tiers", sorted(tracked.get("tiers", {})), sorted(got["tiers"]))
+    for name in sorted(got["tiers"]):
+        want_t = tracked.get("tiers", {}).get(name, {})
+        got_t = got["tiers"][name]
+        problems += [f"tier {name}: {p}" for p in
+                     gate.diff_keys(want_t, got_t, GATED_TIER_KEYS)]
+        for key in INFO_TIER_KEYS:
+            if key not in want_t:
+                problems.append(f"STRUCTURE tier {name}: missing "
+                                f"informational field {key!r}")
+    return gate.report(
+        "sim bench", problems,
+        f"tier signatures and event totals match {path}",
+        "--update-sim")

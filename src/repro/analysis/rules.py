@@ -254,6 +254,72 @@ class Det004FaultStreamConstruction(Rule):
 
 
 # ---------------------------------------------------------------------------
+# PERF — population-scale scheduler hot paths
+# ---------------------------------------------------------------------------
+
+
+@register_rule
+class Perf001PerNodeLoop(Rule):
+    id = "PERF001"
+    title = "no per-node Python loops over the population in sim hot paths"
+    scope = ("src/repro/sim/",)
+    explain = (
+        "The simulator core is array-resident (docs/simulator.md): churn,\n"
+        "offline windows, and rejoin sweeps are numpy operations over the\n"
+        "whole population, because a Python `for v in tree.devices` that\n"
+        "runs every round costs O(population) interpreter iterations and\n"
+        "caps the engine well below its events/sec budget. Loops (or\n"
+        "comprehensions) over `*.devices` / `*.nodes` are allowed only in\n"
+        "construction paths (`__init__`), where they run once. Hot-path\n"
+        "sites that are deliberately scalar — e.g. a draw loop kept in\n"
+        "legacy RNG consumption order for signature compatibility — must\n"
+        "say so with `# analysis: allow[PERF001]`."
+    )
+
+    _POPULATION_ATTRS = frozenset({"devices", "nodes"})
+    #: wrappers that don't change what is being iterated
+    _TRANSPARENT = frozenset({"sorted", "list", "tuple", "enumerate",
+                              "reversed", "set", "frozenset"})
+
+    def _population_src(self, node: ast.AST) -> str | None:
+        """The dotted source of a population-sized iterable, unwrapping
+        transparent call wrappers (``sorted(tree.devices)`` still iterates
+        the population), else None."""
+        if isinstance(node, ast.Call):
+            if (isinstance(node.func, ast.Name)
+                    and node.func.id in self._TRANSPARENT and node.args):
+                return self._population_src(node.args[0])
+            return None
+        if (isinstance(node, ast.Attribute)
+                and node.attr in self._POPULATION_ATTRS):
+            return receiver_src(node) or node.attr
+        return None
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        iters: list[ast.AST] = []
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.For):
+                iters.append(node.iter)
+            elif isinstance(node, (ast.ListComp, ast.SetComp, ast.DictComp,
+                                   ast.GeneratorExp)):
+                iters.extend(gen.iter for gen in node.generators)
+        for it in iters:
+            src = self._population_src(it)
+            if src is None:
+                continue
+            fn = ctx.enclosing_function(it)
+            if fn is not None and fn.name == "__init__":
+                continue  # construction-time: runs once, not per round
+            yield self.finding(
+                ctx, it,
+                f"per-node Python loop over `{src}` outside __init__; "
+                "hot paths sweep the population with array ops "
+                "(docs/simulator.md), or annotate a deliberate scalar "
+                "path with `# analysis: allow[PERF001]`",
+            )
+
+
+# ---------------------------------------------------------------------------
 # ARCH — layering (shim routing + registry-only dispatch)
 # ---------------------------------------------------------------------------
 

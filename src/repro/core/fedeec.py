@@ -83,6 +83,16 @@ class FedEEC(FLAlgorithm):
 
         self.client_data = client_data
         self.embeddings: dict[str, tuple[np.ndarray, np.ndarray]] = {}
+        # per-row provenance of every embedding store: which device each
+        # sample came from (index into the sorted device list). Drives
+        # cohort-weighted bridge sampling under population-scale
+        # scenarios (docs/simulator.md); maintained at the same three
+        # sites as the stores themselves (init / gather / migrate)
+        self.embed_src: dict[str, np.ndarray] = {}
+        self._src_names: list[str] = sorted(client_data)
+        self._src_pos: dict[str, int] = {
+            v: i for i, v in enumerate(self._src_names)}
+        self._bridge_p_cache: dict[str, np.ndarray] = {}
         self._step_cache: dict = {}
         # (node, peer, reason) of BSBODP pairs lost to faults — the
         # knowledge that never agglomerated (docs/robustness.md)
@@ -99,6 +109,8 @@ class FedEEC(FLAlgorithm):
                 x, y = self.client_data[v]
                 eps = np.asarray(enc(self.auto, jnp.asarray(x)))
                 self.embeddings[v] = (eps, y.copy())
+                self.embed_src[v] = np.full(
+                    len(y), self._src_pos[v], dtype=np.int32)
                 # upload (ε, y): (|ε| + 1) per sample — Table VII init term
                 link = self.comm.link_kind(self.tree, v)
                 self.comm.record(link, eps.size + len(y), "init-embed")
@@ -107,15 +119,17 @@ class FedEEC(FLAlgorithm):
         self._gather_children(self.tree.root)
 
     def _gather_children(self, v):
-        es, ys = [], []
+        es, ys, ss = [], [], []
         for c in self.tree.children[v]:
             e, y = self.embeddings[c]
             es.append(e)
             ys.append(y)
+            ss.append(self.embed_src[c])
             if v != self.tree.root:
                 link = self.comm.link_kind(self.tree, v)
                 self.comm.record(link, e.size + y.size, "relay-embed")
         self.embeddings[v] = (np.concatenate(es), np.concatenate(ys))
+        self.embed_src[v] = np.concatenate(ss)
 
     # -------------------------------------------------------------- jit steps
 
@@ -222,7 +236,7 @@ class FedEEC(FLAlgorithm):
         # the single source of truth so the simulator prices what runs
         steps = self.pair_steps(v_s, v_t)
         for _ in range(steps):
-            idx = self.rng.choice(n, size=bs, replace=n < bs)
+            idx = self._bridge_choice(pair_node, n, bs)
             e_b = jnp.asarray(eps[idx])
             y_b = jnp.asarray(labels[idx])
             bridge = dec_fn(e_b)
@@ -244,6 +258,32 @@ class FedEEC(FLAlgorithm):
                 self.params[v_s], self.opt[v_s], _ = student(
                     self.params[v_s], self.opt[v_s], bridge, y_b, tq
                 )
+
+    def _bridge_choice(self, node: str, n: int, bs: int) -> np.ndarray:
+        """Bridge-sample index draw over ``node``'s embedding store. With
+        default size-1 cohorts this is the historical uniform draw (same
+        call, same rng consumption — signatures untouched); under a
+        population-scale scenario rows are drawn proportionally to their
+        source device's cohort size, so the bridge distribution matches
+        the declared population, not the materialized sample."""
+        if not self._cohort_sizes:
+            return self.rng.choice(n, size=bs, replace=n < bs)
+        return self.rng.choice(n, size=bs, replace=n < bs,
+                               p=self._bridge_p(node))
+
+    def _bridge_p(self, node: str) -> np.ndarray:
+        p = self._bridge_p_cache.get(node)
+        if p is None:
+            sizes = np.array([float(self.cohort_size(nm))
+                              for nm in self._src_names])
+            w = sizes[self.embed_src[node]]
+            p = w / w.sum()
+            self._bridge_p_cache[node] = p
+        return p
+
+    def set_cohort_sizes(self, sizes) -> None:
+        super().set_cohort_sizes(sizes)
+        self._bridge_p_cache.clear()
 
     def bsbodp_pair(self, v1: str, v2: str):
         """Algorithm 1/2: both directions."""
@@ -281,8 +321,8 @@ class FedEEC(FLAlgorithm):
         O_s = tmap(lambda *xs: jnp.stack(xs), *[self.opt[vs] for vs, _ in pairs])
 
         for _ in range(steps):
-            idx = [self.rng.choice(len(e[1]), size=bs, replace=len(e[1]) < bs)
-                   for e in embs]
+            idx = [self._bridge_choice(c, len(e[1]), bs)
+                   for c, e in zip(children, embs)]
             e_b = np.stack([e[0][i] for e, i in zip(embs, idx)])
             y_b = jnp.asarray(np.stack([e[1][i] for e, i in zip(embs, idx)]))
             flat = dec_fn(jnp.asarray(e_b).reshape((-1,) + e_b.shape[2:]))
@@ -420,6 +460,24 @@ class FedEEC(FLAlgorithm):
             v: (np.asarray(e), np.asarray(y))
             for v, (e, y) in arrays["embeddings"].items()
         }
+        # provenance is derivable from (restored topology, client_data):
+        # rebuild instead of checkpointing it, in the same child order
+        # the stores concatenate — row i of a store and of its provenance
+        # always describe the same sample
+        self._rebuild_embed_src()
+
+    def _rebuild_embed_src(self) -> None:
+        self.embed_src = {}
+        for v in self.tree.post_order():
+            if v in self.client_data:
+                self.embed_src[v] = np.full(
+                    len(self.embeddings[v][1]), self._src_pos[v],
+                    dtype=np.int32)
+            else:
+                parts = [self.embed_src[c] for c in self.tree.children[v]]
+                self.embed_src[v] = (np.concatenate(parts) if parts
+                                     else np.zeros((0,), dtype=np.int32))
+        self._bridge_p_cache.clear()
 
     def _model_params(self, node: str):
         return self.params[node]
@@ -444,19 +502,23 @@ class FedEEC(FLAlgorithm):
             if v not in self.client_data
         }
         for v in sorted(affected, key=self.tree.tier, reverse=True):
-            es, ys = [], []
+            es, ys, ss = [], [], []
             for c in self.tree.children[v]:
                 e, y = self.embeddings[c]
                 es.append(e)
                 ys.append(y)
+                ss.append(self.embed_src[c])
             if es:
                 self.embeddings[v] = (np.concatenate(es), np.concatenate(ys))
+                self.embed_src[v] = np.concatenate(ss)
             else:
                 self.embeddings[v] = (
                     np.zeros((0,) + self.embeddings[node][0].shape[1:],
                              dtype=self.embeddings[node][0].dtype),
                     np.zeros((0,), dtype=self.embeddings[node][1].dtype),
                 )
+                self.embed_src[v] = np.zeros((0,), dtype=np.int32)
+        self._bridge_p_cache.clear()
         # charge the subtree's (ε, y) upload on every hop of the new path
         eps, ys_ = self.embeddings[node]
         hop = node

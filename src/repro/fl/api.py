@@ -27,16 +27,14 @@ the shared problem inputs (tree / client data / frozen autoencoder).
 from __future__ import annotations
 
 from abc import ABC, abstractmethod
-from dataclasses import dataclass
-from typing import Callable, Iterable, Optional
+from typing import Callable, Iterable, NamedTuple, Optional
 
 from repro.core.protocols import Protocol
 from repro.core.topology import Tree, link_kind
 from repro.fl.comm import CommMeter
 
 
-@dataclass(frozen=True)
-class WorkItem:
+class WorkItem(NamedTuple):
     """One schedulable unit of a training round.
 
     kind:
@@ -46,6 +44,11 @@ class WorkItem:
     ``node`` is the child side of the link the item's traffic crosses (the
     simulator prices transfers on the link above ``node``); ``steps`` is
     the compute step count the simulator turns into seconds.
+
+    A NamedTuple (immutable, named fields) rather than a frozen
+    dataclass: trainers materialize one per participant per round, which
+    at population scale puts construction cost on the simulator's round
+    hot path.
     """
 
     kind: str
@@ -81,6 +84,7 @@ class FLAlgorithm(ABC):
         self.participation: frozenset[str] | None = None
         self._round = 0
         self._refuse_hooks: list[Callable[[str, str, str], None]] = []
+        self._cohort_sizes: dict[str, int] = {}
 
     # -- round decomposition ----------------------------------------------
 
@@ -149,6 +153,27 @@ class FLAlgorithm(ABC):
         saved — a resumed run's event signature must be bit-identical to
         an uninterrupted one."""
         self._round = int(meta.get("round", 0))
+
+    # -- weighted cohorts (docs/simulator.md) -------------------------------
+
+    def set_cohort_sizes(self, sizes: dict[str, int]) -> None:
+        """Declare each materialized device as the representative of a
+        homogeneous cohort of ``sizes[v]`` identical devices. Aggregating
+        trainers multiply their per-client weights by the cohort size, so
+        a scenario can declare a population far larger than the tree it
+        materializes; with every cohort member holding the same data
+        distribution and sample count, the weighted aggregate equals the
+        full-population FedAvg exactly (weights (m·n_i)/(m·Σn) ≡ n_i/Σn
+        bitwise). The simulator calls this once at construction when the
+        scenario declares a ``population``; by default every cohort has
+        size 1 and nothing changes."""
+        self._cohort_sizes = {str(v): int(n) for v, n in sizes.items()}
+
+    def cohort_size(self, v: str) -> int:
+        """Cohort multiplicity of device ``v`` (1 unless a population-scale
+        scenario installed cohort sizes — the int default keeps legacy
+        aggregation-weight values AND types untouched)."""
+        return self._cohort_sizes.get(v, 1)
 
     # -- participation ------------------------------------------------------
 

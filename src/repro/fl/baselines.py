@@ -211,7 +211,13 @@ class HierarchicalFedAvg(FLAlgorithm):
             self._edge_weight[e] = 0.0
             self.comm.record(item.link, 2 * self._nfloats, "params")
             return
-        weights = [len(self.client_data[c][1]) for c, _ in ups]
+        # FedAvg sample counts, scaled by cohort multiplicity: with default
+        # size-1 cohorts the multiply leaves legacy int values AND types
+        # untouched; under a population-scale scenario each representative
+        # client carries its whole homogeneous cohort's sample mass
+        # (docs/simulator.md — exact, not approximate, when homogeneous)
+        weights = [self.cohort_size(c) * len(self.client_data[c][1])
+                   for c, _ in ups]
         ep = aggregate_params([p for _, p in ups], weights)
         # κ2 > 1: the remaining edge rounds iterate locally under this edge.
         # Known simulator approximation: this extra client compute/comm is

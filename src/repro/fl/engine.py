@@ -145,6 +145,7 @@ def run_experiment(
     checkpoint_dir: str = "",
     resume_from: str = "",
     stop_after: int | None = None,
+    profile_sim: bool = False,
 ) -> RunResult:
     """Run ``algorithm`` for R rounds.
 
@@ -193,7 +194,8 @@ def run_experiment(
                            eval_every, verbose, tracer, faults=faults,
                            checkpoint_every=checkpoint_every,
                            checkpoint_dir=checkpoint_dir,
-                           resume_from=resume_from, stop_after=stop_after)
+                           resume_from=resume_from, stop_after=stop_after,
+                           profile_sim=profile_sim)
         else:
             _run_plain(trainer, algorithm, ds, res, rounds, eval_every,
                        verbose, migration_round)
@@ -237,13 +239,14 @@ def _run_plain(trainer, algorithm, ds, res, rounds, eval_every, verbose,
 
 def _run_simulated(trainer, scenario, cfg, ds, res, rounds, eval_every,
                    verbose, tracer=None, *, faults=None, checkpoint_every=0,
-                   checkpoint_dir="", resume_from="", stop_after=None):
+                   checkpoint_dir="", resume_from="", stop_after=None,
+                   profile_sim=False):
     from repro.sim.engine import SimEngine
     from repro.sim.scenarios import get_scenario
 
     sc = get_scenario(scenario) if isinstance(scenario, str) else scenario
     engine = SimEngine(trainer, sc, seed=cfg.seed, tracer=tracer,
-                       faults=faults)
+                       faults=faults, profile=profile_sim)
     if resume_from:
         engine.restore_checkpoint(resume_from)
 

@@ -25,6 +25,7 @@ from __future__ import annotations
 
 import json
 import math
+from bisect import bisect_left
 from typing import Iterable
 
 # Decade-ish bounds covering microseconds..minutes; +Inf is implicit.
@@ -91,13 +92,13 @@ class Histogram:
         v = float(v)
         self.count += 1
         self.sum += v
-        self.min = min(self.min, v)
-        self.max = max(self.max, v)
-        for i, b in enumerate(self.bounds):
-            if v <= b:
-                self.counts[i] += 1
-                return
-        self.counts[-1] += 1
+        if v < self.min:
+            self.min = v
+        if v > self.max:
+            self.max = v
+        # first bucket with bound >= v, i.e. the linear "v <= b" scan;
+        # bisect because the sim observes queue depth once per instant
+        self.counts[bisect_left(self.bounds, v)] += 1
 
     def dump(self) -> dict:
         out = {

@@ -9,6 +9,13 @@ channel (cf. HierFL / HFEL latency models).
 Transfer time of n bytes over the link above ``child``:
 
     t = latency + n / (bandwidth * speed_factor(child))
+
+With fair-share contention enabled (``ScenarioConfig.fair_share``,
+docs/simulator.md), transfers that overlap in simulated time under one
+parent divide that parent's backhaul: a transfer starting while k-1
+others are in flight on sibling links is priced at k times its solo
+serialization time (latency unchanged). Off by default — the solo
+formula above is the legacy path and its signatures are untouched.
 """
 from __future__ import annotations
 
@@ -61,6 +68,20 @@ class NetworkModel:
         for v in sorted(tree.parent):  # sorted → independent of dict order
             spread = self.specs[link_kind(tree, v)].spread
             self._factor[v] = float(1.0 + rng.uniform(-spread, spread))
+        # hot-path cache: (latency, EFFECTIVE bandwidth) per child, the
+        # effective bandwidth being the exact spec-bandwidth x per-link
+        # factor product the formula multiplies — transfer_s is one dict
+        # get + one divide. Migration can re-tier a non-device link, so
+        # entries are dropped on re-parent.
+        self._eff: dict[str, tuple[float, float]] = {}
+        tree.on_migrate(self._on_migrate)
+        # fair-share occupancy: parent -> [(start, end)] of in-flight
+        # transfers this round (only populated when the engine prices
+        # through transfer_shared_s)
+        self._occupancy: dict[str, list[tuple[float, float]]] = {}
+
+    def _on_migrate(self, node: str, old: str, new: str) -> None:
+        self._eff.pop(node, None)
 
     def spec(self, child: str) -> LinkSpec:
         return self.specs[link_kind(self.tree, child)]
@@ -68,9 +89,43 @@ class NetworkModel:
     def speed_factor(self, child: str) -> float:
         return self._factor.get(child, 1.0)
 
+    def _effective(self, child: str) -> tuple[float, float]:
+        eff = self._eff.get(child)
+        if eff is None:
+            s = self.specs[link_kind(self.tree, child)]
+            eff = self._eff[child] = (
+                s.latency_s,
+                s.bandwidth_Bps * self._factor.get(child, 1.0))
+        return eff
+
     def transfer_s(self, child: str, nbytes: float) -> float:
         """Seconds to move ``nbytes`` across the link above ``child``."""
         if nbytes <= 0:
             return 0.0
-        s = self.spec(child)
-        return s.latency_s + nbytes / (s.bandwidth_Bps * self.speed_factor(child))
+        eff = self._eff.get(child) or self._effective(child)
+        return eff[0] + nbytes / eff[1]
+
+    # -- fair-share contention (docs/simulator.md) -------------------------
+
+    def reset_contention(self) -> None:
+        """Forget in-flight transfers; the engine calls this at each round
+        boundary (rounds are barriers — nothing spans them)."""
+        self._occupancy.clear()
+
+    def transfer_shared_s(self, child: str, nbytes: float,
+                          start: float) -> float:
+        """Fair-share transfer pricing: ``nbytes`` over the link above
+        ``child`` beginning at simulated time ``start``, where the k-1
+        transfers already in flight under the same parent at ``start``
+        shrink this one's bandwidth share to 1/k. Monotone by
+        construction: every concurrent transfer can only raise k, and a
+        transfer's own price never changes after it is recorded."""
+        if nbytes <= 0:
+            return 0.0
+        lat, ebw = self._effective(child)
+        parent = self.tree.parent.get(child, "")
+        active = self._occupancy.setdefault(parent, [])
+        k = 1 + sum(1 for s, e in active if s <= start < e)
+        dur = lat + nbytes * k / ebw
+        active.append((start, start + dur))
+        return dur

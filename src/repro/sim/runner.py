@@ -96,6 +96,11 @@ def main(argv=None) -> int:
                     help="write the metrics-registry snapshot JSON here")
     ap.add_argument("--explain-rounds", action="store_true",
                     help="print per-round critical-path attribution")
+    ap.add_argument("--profile-sim", action="store_true",
+                    help="record host-side scheduler throughput "
+                         "(sim_events_per_second gauge) and a per-phase "
+                         "wall-clock breakdown in the metrics registry, "
+                         "and print both after the run")
     ap.add_argument("--list", action="store_true",
                     help="list registered scenarios and exit")
     ap.add_argument("--verify", action="store_true",
@@ -169,8 +174,20 @@ def main(argv=None) -> int:
                              faults=args.faults or None,
                              checkpoint_every=args.checkpoint_every,
                              checkpoint_dir=ckpt_dir,
-                             resume_from=args.resume)
+                             resume_from=args.resume,
+                             profile_sim=args.profile_sim)
         describe(res, args.max_events)
+
+        if args.profile_sim:
+            eps = res.metrics.get("sim_events_per_second", {}).get("value", 0)
+            print(f"\n== simulator profile ==\n  events/sec: {eps:,.1f}")
+            phases = sorted(
+                (name[len("sim_profile_"):-len("_seconds")], m["value"])
+                for name, m in res.metrics.items()
+                if name.startswith("sim_profile_")
+                and name.endswith("_seconds"))
+            for phase, secs in phases:
+                print(f"  {phase:<10} {secs:9.3f}s")
 
         def _path(opt):
             return opt if len(names) == 1 else f"{name}.{opt}"

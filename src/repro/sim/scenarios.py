@@ -70,6 +70,21 @@ class ScenarioConfig:
     # path, whose event signatures are bit-identical to pre-fault builds
     faults: Optional[FaultPlan] = None
 
+    # -- population scale (docs/simulator.md) ------------------------------
+    # declared device population represented by the materialized tree: 0
+    # means "the tree IS the population"; > 0 splits `population` devices
+    # into one homogeneous cohort per materialized leaf (sizes differing
+    # by at most one) and feeds the cohort sizes to the trainer as
+    # aggregation-weight multipliers — exact FedAvg equivalence when
+    # cohort members are homogeneous
+    population: int = 0
+
+    # -- link contention (docs/simulator.md) -------------------------------
+    # fair-share backhaul pricing: transfers that overlap in simulated
+    # time under one parent divide its bandwidth instead of enjoying
+    # independent pipes. Off by default — legacy signatures untouched.
+    fair_share: bool = False
+
     def with_overrides(self, **kw) -> "ScenarioConfig":
         return replace(self, **kw)
 
@@ -177,6 +192,19 @@ register_scenario(ScenarioConfig(
     dropout_prob=0.10,
     dropout_s=(2.0, 10.0),
     faults=get_fault_plan("byzantine"),
+))
+
+register_scenario(ScenarioConfig(
+    "megacity",
+    "Metropolitan population: 120k declared devices trained through "
+    "weighted cohorts on a representative sample, with mild churn and "
+    "fair-share contention on the shared edge backhaul.",
+    population=120_000,
+    dropout_prob=0.05,
+    dropout_s=(5.0, 20.0),
+    straggler_frac=0.2,
+    straggler_slowdown=4.0,
+    fair_share=True,
 ))
 
 register_scenario(ScenarioConfig(

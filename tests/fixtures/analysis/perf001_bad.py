@@ -1,0 +1,12 @@
+"""PERF001 violation: per-node Python loops on the scheduler hot path."""
+
+
+class Sweeper:
+    def draw_round(self, now):
+        for v in self.tree.devices:
+            self.probe(v, now)
+        online = [v for v in sorted(self.tree.devices)
+                  if self.until[v] <= now]
+        for v in list(self.net.nodes):
+            self.touch(v)
+        return online

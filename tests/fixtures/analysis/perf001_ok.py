@@ -1,0 +1,16 @@
+"""PERF001 clean: array sweeps, construction-time loops, annotated scalars."""
+import numpy as np
+
+
+class Churn:
+    def __init__(self, tree):
+        self.names = sorted(tree.devices)  # construction-time: runs once
+        self.until = np.zeros(len(self.names))
+
+    def offline_set(self, now):
+        idx = np.nonzero(self.until > now)[0]  # array sweep, C-speed
+        return {self.names[i] for i in idx}
+
+    def migrate_round(self, tree, rng):
+        for v in tree.devices:  # analysis: allow[PERF001] rng-order compat
+            rng.random()
